@@ -1,0 +1,70 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, then
+the roofline table derived from the dry-run artifacts (if present).
+
+  paper Fig. 1/2  → time comparison (sequential vs sharded engines)
+  paper Figs. 3–6 → MAE/Precision/Recall/F1 vs top-N × {jaccard,cosine,pcc}
+  methodology     → kernel microbenches + roofline terms
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    # -- paper Figs. 3-6: metric curves ------------------------------------
+    try:
+        from benchmarks import bench_topn_metrics
+        for r in bench_topn_metrics.run(n_users=1024, n_items=768):
+            name = f"topn_{r['measure']}_k{r['top_n']}"
+            derived = (f"mae={r['mae']:.4f} p={r['precision']:.4f} "
+                       f"r={r['recall']:.4f} f1={r['f1']:.4f}")
+            print(f"{name},{r['seconds'] * 1e6:.0f},{derived}")
+    except Exception:
+        traceback.print_exc()
+
+    # -- paper Figs. 1-2: thread/shard time comparison ---------------------
+    try:
+        from benchmarks import bench_time_comparison
+        checks = set()
+        for n in (1, 2, 4, 8):
+            n, dt, csum = bench_time_comparison.run_shard(n)
+            checks.add(round(csum, 3))
+            print(f"time_comparison_shards{n},{dt * 1e6:.0f},"
+                  f"per_shard_users={1024 // n} checksum={csum:.3f}")
+        print(f"time_comparison_exactness,0,"
+              f"identical_across_shards={len(checks) == 1}")
+    except Exception:
+        traceback.print_exc()
+
+    # -- kernels ------------------------------------------------------------
+    try:
+        from benchmarks import bench_kernels
+        for name, us, derived in bench_kernels.run():
+            print(f"kernel_{name},{us:.1f},{derived}")
+    except Exception:
+        traceback.print_exc()
+
+    # -- roofline (from dry-run artifacts) -----------------------------------
+    try:
+        from benchmarks import roofline
+        rows = [roofline.roofline_row(r) for r in roofline.load_cells()]
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            name = f"roofline_{r['arch']}_{r['shape']}"
+            derived = (f"compute_s={r['compute_s']:.3e} "
+                       f"mem_floor_s={r['memory_s']:.3e} "
+                       f"coll_s={r['collective_s']:.3e} "
+                       f"bottleneck={r['dominant']} "
+                       f"frac={r['roofline_fraction']:.3f}")
+            print(f"{name},0,{derived}")
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: mesh-parallel memory-based collaborative filtering in JAX.
+
+Reproduction + scale-out of "An Efficient Multi-threaded Collaborative
+Filtering Approach in Recommendation System" (Hasan, 2024), plus the
+substrate for the 10 assigned architectures.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""Per-architecture configs (exact published numbers) + the shape registry."""
+
+from repro.configs.registry import (ASSIGNED, ArchSpec, ShapeCell, all_archs,
+                                    all_cells, get_arch, input_specs)
+
+__all__ = ["ASSIGNED", "ArchSpec", "ShapeCell", "all_archs", "all_cells",
+           "get_arch", "input_specs"]

@@ -1,0 +1,23 @@
+"""The paper's own architecture: mesh-parallel user-based CF on MovieLens.
+
+``fit_ml1m`` is the paper's scale (users padded 6040 → 6144 so the user axis
+divides the 512-device mesh); ``fit_1m_users`` is the production-scale cell
+that motivates the ring engine (2^20 users never fit one device).
+"""
+
+import dataclasses
+
+from repro.configs.registry import ArchSpec, CF_SHAPES
+from repro.core.cf_model import CFConfig
+
+CONFIG = CFConfig(measure="pcc", top_k=40, engine="ring", block_size=1024)
+
+
+def smoke_config() -> CFConfig:
+    return dataclasses.replace(CONFIG, top_k=8, block_size=64,
+                               engine="sequential")
+
+
+ARCH = ArchSpec(name="cf-movielens", kind="cf", config=CONFIG,
+                optimizer="sgd", shapes=CF_SHAPES,
+                smoke_config=smoke_config)

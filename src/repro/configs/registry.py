@@ -1,0 +1,216 @@
+"""Architecture registry: every assigned arch × its shape set.
+
+``ArchSpec`` binds a model config to its family ("lm" | "gnn" | "recsys" |
+"cf"), optimizer, and shape cells.  ``input_specs(arch, cell)`` returns
+``jax.ShapeDtypeStruct`` stand-ins for every model input of that cell — the
+dry-run lowers against these, so nothing is ever allocated at full scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+i32 = jnp.int32
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    step: str                 # train | prefill | decode | serve | retrieval
+    dims: Dict[str, int]
+    skip: Optional[str] = None    # reason, if this cell is not runnable
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    kind: str                 # lm | gnn | recsys | cf
+    config: Any
+    optimizer: str
+    shapes: Tuple[ShapeCell, ...]
+    smoke_config: Callable[[], Any]
+    model: str = ""           # recsys model module name
+
+    def cell(self, name: str) -> ShapeCell:
+        for c in self.shapes:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.name} has no shape {name!r}")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# family shape sets
+# ---------------------------------------------------------------------------
+
+def lm_shapes(full_attention: bool = True) -> Tuple[ShapeCell, ...]:
+    skip = ("pure full-attention arch: 524288-token decode is out of scope "
+            "per assignment (no sub-quadratic attention variant); see "
+            "DESIGN.md §4" if full_attention else None)
+    return (
+        ShapeCell("train_4k", "train", {"batch": 256, "seq": 4096}),
+        ShapeCell("prefill_32k", "prefill", {"batch": 32, "seq": 32768}),
+        ShapeCell("decode_32k", "decode", {"batch": 128, "seq": 32768}),
+        ShapeCell("long_500k", "decode", {"batch": 1, "seq": 524288},
+                  skip=skip),
+    )
+
+
+GNN_SHAPES = (
+    ShapeCell("full_graph_sm", "train",
+              {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433}),
+    ShapeCell("minibatch_lg", "train",
+              {"n_nodes": 232965, "n_edges": 114615892,
+               "batch_nodes": 1024, "fanout1": 15, "fanout2": 10,
+               "d_feat": 602}),
+    ShapeCell("ogb_products", "train",
+              {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100}),
+    ShapeCell("molecule", "train",
+              {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 11}),
+)
+
+RECSYS_SHAPES = (
+    ShapeCell("train_batch", "train", {"batch": 65536}),
+    ShapeCell("serve_p99", "serve", {"batch": 512}),
+    ShapeCell("serve_bulk", "serve", {"batch": 262144}),
+    ShapeCell("retrieval_cand", "retrieval",
+              {"batch": 1, "n_candidates": 1_048_576}),   # 2^20 ≈ "1M";
+              # divides the 512-device mesh exactly (1e6 does not)
+)
+
+CF_SHAPES = (
+    ShapeCell("fit_ml1m", "cf_fit", {"users": 6144, "items": 3952}),
+    ShapeCell("fit_1m_users", "cf_fit", {"users": 1048576, "items": 65536}),
+    ShapeCell("predict_bulk", "cf_predict",
+              {"users": 1048576, "items": 65536}),
+)
+
+
+# ---------------------------------------------------------------------------
+# input specs per family
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchSpec, cell: ShapeCell) -> Dict[str, Any]:
+    if arch.kind == "lm":
+        return _lm_inputs(arch.config, cell)
+    if arch.kind == "gnn":
+        return _gnn_inputs(arch.config, cell)
+    if arch.kind == "recsys":
+        return _recsys_inputs(arch, cell)
+    if arch.kind == "cf":
+        return _cf_inputs(arch.config, cell)
+    raise ValueError(arch.kind)
+
+
+def _lm_inputs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.dims["batch"], cell.dims["seq"]
+    if cell.step == "train":
+        return {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+    if cell.step == "prefill":
+        return {"tokens": _sds((b, s), i32)}
+    if cell.step == "decode":
+        from repro.models import transformer as tx
+        cache = jax.eval_shape(lambda: tx.init_cache(cfg, b, s))
+        return {"tokens": _sds((b, 1), i32), "cache": cache}
+    raise ValueError(cell.step)
+
+
+def pad_edges(e: int, mult: int = 1024) -> int:
+    """Edge lists shard over all 512 devices → pad to a clean multiple.
+
+    Padding edges are (dummy → dummy) self-loops on one extra node whose
+    label is -1, so they contribute nothing to the loss (see data.graph).
+    """
+    return ((e + mult - 1) // mult) * mult
+
+
+def _gnn_inputs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    d = cell.dims
+    if cell.name == "molecule":
+        b, n, e = d["batch"], d["n_nodes"], d["n_edges"]
+        return {"feat": _sds((b, n, d["d_feat"]), f32),
+                "coord": _sds((b, n, 3), f32),
+                "edges": _sds((b, 2, e), i32),
+                "labels": _sds((b, n), i32)}
+    if cell.name == "minibatch_lg":
+        b = d["batch_nodes"]
+        f1, f2 = d["fanout1"], d["fanout2"]
+        n_budget = b * (1 + f1 + f1 * f2) + 1
+        e_budget = pad_edges(b * (f1 + f1 * f2))
+        return {"feat": _sds((n_budget, d["d_feat"]), f32),
+                "coord": _sds((n_budget, 3), f32),
+                "edges": _sds((2, e_budget), i32),
+                "labels": _sds((n_budget,), i32)}
+    n, e = d["n_nodes"] + 1, pad_edges(d["n_edges"])
+    return {"feat": _sds((n, d["d_feat"]), f32),
+            "coord": _sds((n, 3), f32),
+            "edges": _sds((2, e), i32),
+            "labels": _sds((n,), i32)}
+
+
+def _recsys_inputs(arch: ArchSpec, cell: ShapeCell) -> Dict[str, Any]:
+    cfg = arch.config
+    b = cell.dims["batch"]
+    if arch.model == "bert4rec":
+        base = {"items": _sds((b, cfg.seq_len), i32)}
+        if cell.step == "train":
+            base["labels"] = _sds((b, cfg.seq_len), i32)
+        if cell.step == "retrieval":
+            base["candidates"] = _sds((cell.dims["n_candidates"],), i32)
+        return base
+    base = {"sparse": _sds((b, cfg.n_sparse), i32)}
+    if arch.model == "dlrm":
+        base["dense"] = _sds((b, cfg.n_dense), f32)
+    if cell.step == "train":
+        base["labels"] = _sds((b,), i32)
+    if cell.step == "retrieval":
+        base["candidates"] = _sds((cell.dims["n_candidates"],), i32)
+    return base
+
+
+def _cf_inputs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    u, i = cell.dims["users"], cell.dims["items"]
+    return {"ratings": _sds((u, i), f32)}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_ARCH_MODULES = (
+    "qwen1_5_110b", "llama3_2_1b", "codeqwen1_5_7b", "qwen3_moe_30b_a3b",
+    "deepseek_v2_236b", "egnn", "dlrm_mlperf", "fm", "xdeepfm", "bert4rec",
+    "cf_movielens",
+)
+
+ASSIGNED = _ARCH_MODULES[:10]      # the 40-cell pool; cf_movielens is extra
+
+
+def get_arch(name: str) -> ArchSpec:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.ARCH
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    return {name: get_arch(name) for name in _ARCH_MODULES}
+
+
+def all_cells(include_skipped: bool = False):
+    """Every assigned (arch, shape) pair — the 40-cell grid."""
+    out = []
+    for name in ASSIGNED:
+        arch = get_arch(name)
+        for cell in arch.shapes:
+            if cell.skip and not include_skipped:
+                continue
+            out.append((arch, cell))
+    return out

@@ -1,0 +1,19 @@
+"""Core of the paper: mesh-parallel memory-based collaborative filtering."""
+
+from repro.core.cf_model import CFConfig, CFState, UserCF
+from repro.core.metrics import (mae, precision_recall_f1, rmse,
+                                topn_precision_recall)
+from repro.core.neighbors import merge_topk, topk_neighbors
+from repro.core.predict import predict_from_neighbors, recommend_topn
+from repro.core.similarity import (SIMILARITY_MEASURES, all_measures,
+                                   gram_terms, pairwise_similarity,
+                                   user_means)
+from repro.core.slope_one import SlopeOne
+
+__all__ = [
+    "CFConfig", "CFState", "UserCF", "SIMILARITY_MEASURES",
+    "all_measures", "gram_terms", "pairwise_similarity", "user_means",
+    "topk_neighbors", "merge_topk", "predict_from_neighbors",
+    "recommend_topn", "mae", "rmse", "precision_recall_f1",
+    "topn_precision_recall", "SlopeOne",
+]

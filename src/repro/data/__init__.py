@@ -1,0 +1,13 @@
+"""Data substrate: synthetic datasets, samplers, and batch pipelines."""
+
+from repro.data.batches import (bert4rec_batch, candidates, lm_batch,
+                                recsys_batch)
+from repro.data.graph import (GraphSpec, NeighborSampler, molecules_batch,
+                              synthetic_graph)
+from repro.data.movielens import (MovieLensSpec, generate_ratings,
+                                  load_ml1m_synthetic, train_test_split)
+
+__all__ = ["MovieLensSpec", "generate_ratings", "load_ml1m_synthetic",
+           "train_test_split", "GraphSpec", "NeighborSampler",
+           "molecules_batch", "synthetic_graph", "lm_batch", "recsys_batch",
+           "bert4rec_batch", "candidates"]

@@ -1,0 +1,80 @@
+"""Fault-tolerance substrate: failure detection, straggler watchdog.
+
+On a real pod, failures surface as raised exceptions from the runtime
+(device halt, ICI timeout) or as missing heartbeats from a host.  The train
+loop (``repro.training.train_loop``) wraps every step in ``guard`` and
+recovers by restoring the latest committed checkpoint — the same path a
+scheduler-driven restart takes, so the recovery logic is exercised in tests
+via deterministic fault injection.
+
+Straggler policy: synchronous SPMD can't skip a slow worker, so mitigation
+is detection + escalation: an EWMA watchdog flags steps slower than
+``threshold×`` the running mean; persistent stragglers get reported to the
+launcher for (simulated) hot-swap — at 1000+ nodes this is the difference
+between a 2% and a 40% throughput loss (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+class InjectedFault(RuntimeError):
+    """Deterministic stand-in for a device/host failure."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raise ``InjectedFault`` at the configured steps (tests/drills)."""
+    fail_at_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFault(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor; flags outliers and repeat offenders."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    grace_steps: int = 5
+    ewma: Optional[float] = None
+    flagged_steps: List[int] = dataclasses.field(default_factory=list)
+    consecutive: int = 0
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True when this step is a straggler."""
+        if self.ewma is None:
+            self.ewma = seconds
+            return False
+        is_slow = step >= self.grace_steps and \
+            seconds > self.threshold * self.ewma
+        if is_slow:
+            self.flagged_steps.append(step)
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        return is_slow
+
+    @property
+    def needs_escalation(self) -> bool:
+        """Persistent straggler → report to launcher for hot-swap."""
+        return self.consecutive >= 3
+
+
+@dataclasses.dataclass
+class RecoveryPolicy:
+    """How the loop responds to a failure."""
+    max_restarts: int = 3
+    on_restore: Optional[Callable[[int], None]] = None
+    restarts: int = 0
+
+    def should_restart(self) -> bool:
+        self.restarts += 1
+        return self.restarts <= self.max_restarts

@@ -1,0 +1,59 @@
+"""Mesh-aware sharding helpers: logical axes → NamedSharding trees."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ShardingCtx
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """DP axes for activation batches: (pod, data) when both exist."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def make_ctx(mesh: Mesh, *, dp_over_all: bool = False) -> ShardingCtx:
+    """Build the ShardingCtx models thread through their forward passes.
+
+    ``dp_over_all`` is the recsys layout: pure DP over every mesh axis
+    (embeddings are model-parallel via their own shard_map, the dense nets
+    replicate and split the batch 512 ways).
+    """
+    return ShardingCtx(
+        batch=all_axes(mesh) if dp_over_all else batch_axes(mesh),
+        model="model" if "model" in mesh.axis_names else None,
+        fsdp="data" if "data" in mesh.axis_names else None,
+        enabled=True, mesh=mesh)
+
+
+def _sanitize(mesh: Mesh, spec: P) -> P:
+    """Drop mesh axes a spec references that this mesh doesn't have."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec pytree → NamedSharding pytree for ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, _sanitize(mesh, s)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

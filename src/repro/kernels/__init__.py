@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a backend-dispatching
+wrapper in ``ops.py``; kernels are validated in interpret mode on CPU and
+target Mosaic on real TPU.
+"""
+
+from repro.kernels.ops import embedding_bag, flash_attention, pairwise_similarity
+
+__all__ = ["embedding_bag", "flash_attention", "pairwise_similarity"]

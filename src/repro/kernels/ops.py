@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the Pallas kernels with backend dispatch.
+
+On real TPU the Mosaic kernels run natively; on CPU (this container, and any
+unit test) they run in interpret mode or fall back to the jnp oracle.  The
+``impl`` argument makes the choice explicit where callers care.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.similarity import fused_similarity as _sim_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_similarity(ra, rb, *, measure="all", impl: str | None = None,
+                        **kw):
+    """Fused-kernel pairwise similarity with oracle fallback."""
+    impl = impl or ("pallas" if _on_tpu() else "xla")
+    if impl == "pallas":
+        return _sim_pallas(ra, rb, measure=measure, **kw)
+    if impl == "pallas_interpret":
+        return _sim_pallas(ra, rb, measure=measure, interpret=True, **kw)
+    return ref.similarity_ref(ra, rb, measure)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None,
+                    impl: str | None = None, **kw):
+    impl = impl or ("pallas" if _on_tpu() else "xla")
+    if impl == "pallas":
+        return _flash_pallas(q, k, v, causal=causal, scale=scale, **kw)
+    if impl == "pallas_interpret":
+        return _flash_pallas(q, k, v, causal=causal, scale=scale,
+                             interpret=True, **kw)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def embedding_bag(table, indices, *, combiner="sum", impl: str | None = None,
+                  **kw):
+    impl = impl or ("pallas" if _on_tpu() else "xla")
+    if impl == "pallas":
+        return _bag_pallas(table, indices, combiner=combiner, **kw)
+    if impl == "pallas_interpret":
+        return _bag_pallas(table, indices, combiner=combiner,
+                           interpret=True, **kw)
+    return ref.embedding_bag_ref(table, indices, combiner=combiner)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode
+on CPU, Mosaic on real TPU).  They are intentionally simple and allocate
+freely; production code calls ``repro.kernels.ops`` instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import similarity as core_sim
+
+
+# -- fused pairwise similarity ------------------------------------------------
+
+def similarity_ref(ra: jnp.ndarray, rb: jnp.ndarray, measure: str = "all"):
+    """(m, D) × (n, D) → similarity under ``measure`` (or all three)."""
+    g = core_sim.gram_terms(ra, rb)
+    out = {
+        "jaccard": core_sim.jaccard_from_gram(g),
+        "cosine": core_sim.cosine_from_gram(g),
+        "pcc": core_sim.pcc_from_gram(g),
+    }
+    if measure == "all":
+        return out["jaccard"], out["cosine"], out["pcc"]
+    return out[measure]
+
+
+# -- attention ----------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, scale: float | None = None,
+                  ) -> jnp.ndarray:
+    """Naive attention oracle.  q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D).
+
+    GQA: Hq must be a multiple of Hkv; kv heads are repeated.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# -- embedding bag --------------------------------------------------------------
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray, *,
+                      combiner: str = "sum") -> jnp.ndarray:
+    """(V, D) table, (B, L) indices with -1 padding → (B, D) bags."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = table[safe] * valid[..., None].astype(table.dtype)   # (B, L, D)
+    bags = jnp.sum(rows, axis=1)
+    if combiner == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        bags = bags / cnt.astype(bags.dtype)
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return bags

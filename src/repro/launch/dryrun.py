@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run wants 512 placeholder
+CPU devices (smoke tests and benches see the real single device).
+
+Per cell this records, to results/dryrun/<mesh>/<arch>__<shape>.json:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — per-device HLO flops / bytes accessed
+  * per-collective byte totals parsed from the post-SPMD HLO text
+The roofline report (benchmarks/roofline.py) is derived from these files.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
+  python -m repro.launch.dryrun --all              # every cell, subprocesses
+  python -m repro.launch.dryrun --all --multipod   # (2,16,16) pass
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from collections import defaultdict
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dtype])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type byte totals (output-shape sizes, per device).
+
+    ``-done`` ops carry no shape of their own in post-SPMD HLO; ``-start``
+    and sync forms are counted once each via the output shape to the left of
+    the op name.
+    """
+    out = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        b = shape_bytes(shape_txt)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return dict(out)
+
+
+def _compile_plan(arch, cell, mesh):
+    import jax
+    from repro.launch.steps import build_step
+    plan = build_step(arch, cell, mesh)
+    jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*plan.example_args)
+        compiled = lowered.compile()
+    return compiled
+
+
+# §Perf variants: config transformations measured against the baseline
+def _apply_variant(arch, name):
+    import dataclasses as dc
+    if not name:
+        return arch
+    cfg = arch.config
+    if name == "gatherw":
+        cfg = dc.replace(cfg, gather_weights_at_use=True)
+    elif name.startswith("gatherw_ub"):
+        cfg = dc.replace(cfg, gather_weights_at_use=True,
+                         microbatch=int(name.split("ub")[1]))
+    elif name.startswith("ub"):
+        cfg = dc.replace(cfg, microbatch=int(name[2:]))
+    elif name.startswith("offl_ub"):
+        cfg = dc.replace(cfg, gather_weights_at_use=True,
+                         remat_policy="offload_psum",
+                         microbatch=int(name.split("ub")[1]))
+    elif name == "replicated":        # CF: shared-memory engine
+        cfg = dc.replace(cfg, engine="sharded")
+    elif name.startswith("cf"):       # cf1.0 etc: MoE capacity factor
+        m = dc.replace(cfg.moe, capacity_factor=float(name[2:]))
+        cfg = dc.replace(cfg, moe=m)
+    elif name.startswith("blk"):      # CF block size
+        cfg = dc.replace(cfg, block_size=int(name[3:]))
+    else:
+        raise ValueError(f"unknown variant {name!r}")
+    return dc.replace(arch, config=cfg)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             variant: str = "") -> dict:
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_flat_mesh, make_production_mesh
+
+    arch = _apply_variant(get_arch(arch_name), variant)
+    cell = arch.cell(shape_name)
+    if cell.skip:
+        return {"arch": arch.name, "shape": cell.name, "skipped": cell.skip}
+
+    mesh = make_flat_mesh(multi_pod=multi_pod) if arch.kind == "cf" \
+        else make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    compiled = _compile_plan(arch, cell, mesh)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    # loop-aware re-derivation: XLA's CPU cost_analysis counts while-loop
+    # bodies once; the hlo_cost parser multiplies by known_trip_count
+    from repro.launch import hlo_cost
+    parsed = hlo_cost.analyze(hlo)
+
+    rec = {
+        "arch": arch.name,
+        "shape": cell.name,
+        "variant": variant or "baseline",
+        "step": cell.step,
+        "mesh": "multi_pod(2,16,16)" if multi_pod else "single_pod(16,16)",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": ca.get("flops"),
+        "bytes_accessed_per_device": ca.get("bytes accessed"),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collectives": colls,
+        "collective_bytes_total": sum(v["bytes"] for v in colls.values()),
+        "hlo_parsed": parsed,
+        "hlo_lines": hlo.count("\n"),
+    }
+    print(json.dumps(rec, indent=2))
+    print(f"MEMORY_ANALYSIS: {ma}")
+    return rec
+
+
+def _cell_list():
+    from repro.configs.registry import ASSIGNED, get_arch
+    cells = []
+    for name in list(ASSIGNED) + ["cf_movielens"]:
+        arch = get_arch(name)
+        for c in arch.shapes:
+            cells.append((name, c.name, bool(c.skip)))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    mesh_tag = "multi_pod" if args.multipod else "single_pod"
+    outdir = RESULTS / mesh_tag
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if not args.all:
+        rec = run_cell(args.arch, args.shape, args.multipod, args.variant)
+        suffix = f"__{args.variant}" if args.variant else ""
+        out = outdir / f"{args.arch}__{args.shape}{suffix}.json"
+        out.write_text(json.dumps(rec, indent=2))
+        return
+
+    # run every cell in its own subprocess: isolates compile memory and
+    # makes the sweep resumable (skip cells that already have results)
+    failures = []
+    for arch_name, shape_name, skipped in _cell_list():
+        out = outdir / f"{arch_name}__{shape_name}.json"
+        if out.exists() and not args.force:
+            print(f"[skip-done] {arch_name}:{shape_name}")
+            continue
+        if skipped:
+            from repro.configs.registry import get_arch
+            cell = get_arch(arch_name).cell(shape_name)
+            out.write_text(json.dumps(
+                {"arch": arch_name, "shape": shape_name,
+                 "skipped": cell.skip}, indent=2))
+            print(f"[skip-cell] {arch_name}:{shape_name}: {cell.skip}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch_name, "--shape", shape_name]
+        if args.multipod:
+            cmd.append("--multipod")
+        print(f"[run] {arch_name}:{shape_name} ({mesh_tag})", flush=True)
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+        except subprocess.TimeoutExpired:
+            failures.append((arch_name, shape_name, "timeout"))
+            print(f"  TIMEOUT after {args.timeout}s")
+            continue
+        if r.returncode != 0:
+            failures.append((arch_name, shape_name, r.stderr[-2000:]))
+            print(f"  FAILED ({time.time()-t0:.0f}s):\n{r.stderr[-2000:]}")
+        else:
+            print(f"  ok ({time.time()-t0:.0f}s)")
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for a, s, e in failures:
+            print(f"  {a}:{s}: {e.splitlines()[-1] if e.splitlines() else e}")
+        sys.exit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

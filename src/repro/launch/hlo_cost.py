@@ -1,0 +1,270 @@
+"""Loop-aware cost model over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts a while-loop
+body ONCE, so a scan-over-layers transformer reports ~1/L of its real flops.
+This module re-derives per-device costs from the HLO text itself:
+
+  * parse every computation, tracking each op's output shape by name so
+    operand shapes can be resolved (CPU HLO dumps don't inline them),
+  * flops: dot ops (2·|out|·K with K from the lhs contracting dims),
+    elementwise/reduce ops (|out|),
+  * bytes: operand + output sizes at op granularity (fusion interiors are
+    excluded — the fusion call site's operands/outputs are the buffers that
+    actually touch memory),
+  * collective bytes per type (output-shape sizes),
+  * recurse through fusion/call/while/conditional edges, multiplying while
+    bodies by their ``known_trip_count`` annotation.
+
+The result is the HLO_FLOPs / HLO_bytes / collective_bytes basis of the
+roofline analysis (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_CALLED = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count[^}]*?"?n"?[=:]"?(\d+)"?')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.coll.items():
+            self.coll[k] += v * scale
+        self.unknown_loops += other.unknown_loops
+
+
+def _split_operands(line: str) -> str:
+    """Text inside the op's outermost parens (the operand list)."""
+    eq = line.find(" = ")
+    start = line.find("(", eq if eq >= 0 else 0)
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:i]
+    return line[start + 1:]
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.shapes: Dict[str, Dict[str, str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if cur is None:
+                m = _COMP_HDR.match(stripped)
+                if m and stripped.endswith("{") and "->" in stripped:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    self.shapes[cur] = {}
+                    if stripped.startswith("ENTRY"):
+                        self.entry = cur
+            else:
+                if stripped == "}":
+                    cur = None
+                    continue
+                self.computations[cur].append(line)
+                m = _OP_RE.match(line)
+                if m:
+                    self.shapes[cur][m.group(1)] = m.group(2)
+        if self.entry is None and self.computations:
+            for name in self.computations:
+                if name.startswith("main"):
+                    self.entry = name
+                    break
+            else:
+                self.entry = next(iter(self.computations))
+
+    def _operand_bytes(self, comp: str, operands_txt: str) -> Tuple[int, int]:
+        """(elems, bytes) of named operands, resolved via the shape table."""
+        table = self.shapes[comp]
+        elems = bytes_ = 0
+        for name in _NAME_RE.findall(operands_txt):
+            shp = table.get(name)
+            if shp:
+                e, b = _shape_elems_bytes(shp)
+                elems += e
+                bytes_ += b
+        # inline-shaped operands (older dumps)
+        e, b = _shape_elems_bytes(operands_txt)
+        elems += e
+        bytes_ += b
+        return elems, bytes_
+
+    def _op_cost(self, comp: str, line: str) -> Cost:
+        c = Cost()
+        m = _OP_RE.match(line)
+        if not m:
+            return c
+        _, out_shape_txt, op = m.group(1), m.group(2), m.group(3)
+        if op in _ZERO_COST:
+            return c
+        out_elems, out_bytes = _shape_elems_bytes(out_shape_txt)
+        operands_txt = _split_operands(line)
+        # strip attributes that follow operands but live inside metadata
+        in_elems, in_bytes = self._operand_bytes(comp, operands_txt)
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVES:
+            c.coll[base_op] += out_bytes
+            c.bytes += out_bytes + in_bytes
+            return c
+        if op.endswith("-done"):
+            return c
+
+        if op == "while":
+            called = _CALLED.findall(line)          # body (and to_apply-less)
+            trip = _TRIP.search(line)
+            n = int(trip.group(1)) if trip else 1
+            if not trip:
+                c.unknown_loops += 1
+            for name in called:
+                c.add(self.cost_of(name), scale=n)
+            return c
+        if op in ("fusion", "call", "async-start", "reduce", "scatter",
+                  "select-and-scatter", "map", "sort", "reduce-window"):
+            mm = _CALLED.search(line)
+            if mm:
+                sub = self.cost_of(mm.group(1))
+                if op == "fusion":
+                    # fusion interiors: flops only; buffers are loop-local
+                    c.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        c.coll[k] += v
+                    c.unknown_loops += sub.unknown_loops
+                elif op in ("reduce", "scatter", "reduce-window", "sort",
+                            "select-and-scatter", "map"):
+                    c.flops += float(out_elems)      # applied per element
+                else:
+                    c.add(sub)
+            c.bytes += out_bytes + in_bytes
+            return c
+        if op == "conditional":
+            mb = _BRANCHES.search(line)
+            if mb:
+                subs = [self.cost_of(b.strip().lstrip("%"))
+                        for b in mb.group(1).split(",")]
+                if subs:
+                    best = max(subs, key=lambda s: s.flops)
+                    c.add(best)
+            c.bytes += out_bytes + in_bytes
+            return c
+        if op == "dot":
+            mm = _CONTRACT.search(line)
+            k_size = 1
+            if mm:
+                dims = [int(d) for d in mm.group(1).split(",") if d]
+                names = _NAME_RE.findall(operands_txt)
+                lhs_shape = self.shapes[comp].get(names[0]) if names else None
+                if lhs_shape is None:
+                    mfirst = _SHAPE_RE.search(operands_txt)
+                    lhs_shape = mfirst.group(0) if mfirst else None
+                if lhs_shape:
+                    lhs_dims = _shape_dims(lhs_shape)
+                    for d in dims:
+                        if d < len(lhs_dims):
+                            k_size *= lhs_dims[d]
+            c.flops += 2.0 * out_elems * k_size
+            c.bytes += out_bytes + in_bytes
+            return c
+        if op == "convolution":
+            c.flops += 2.0 * out_elems * max(in_elems // max(out_elems, 1), 1)
+            c.bytes += out_bytes + in_bytes
+            return c
+        # generic elementwise / copy / dynamic-slice / gather / iota …
+        c.flops += float(out_elems)
+        c.bytes += out_bytes + in_bytes
+        return c
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()          # break cycles defensively
+        total = Cost()
+        for line in self.computations.get(comp, ()):
+            total.add(self._op_cost(comp, line))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Dict:
+    model = HloCostModel(hlo_text)
+    c = model.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": dict(c.coll),
+        "collective_bytes_total": float(sum(c.coll.values())),
+        "unknown_trip_count_loops": c.unknown_loops,
+    }

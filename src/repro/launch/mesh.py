@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes (data, model).  Multi-pod:
+(2, 16, 16) = 512 chips with the leading ``pod`` axis as outer data
+parallelism (the slow inter-pod DCI links only ever carry gradient
+all-reduces, never layer-wise TP traffic).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_flat_mesh(*, multi_pod: bool = False, axis: str = "data"):
+    """Same devices as one ring — the CF engines' 1-axis partition view."""
+    n = 512 if multi_pod else 256
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def make_local_mesh(shape=None, axes=None):
+    """Mesh over whatever local devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape, axes = (n,), ("data",)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

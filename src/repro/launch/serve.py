@@ -1,0 +1,50 @@
+"""Serving launcher: fit the CF model and serve batched recommendations.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CFConfig, UserCF
+from repro.data import load_ml1m_synthetic
+from repro.serving.engine import BatchingServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=1024)
+    ap.add_argument("--items", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--topn", type=int, default=10)
+    args = ap.parse_args()
+
+    train, _, _ = load_ml1m_synthetic(n_users=args.users,
+                                      n_items=args.items)
+    tr = jnp.asarray(train)
+    cf = UserCF(CFConfig(measure="pcc", top_k=40, block_size=256))
+    cf.fit(tr)
+    server = BatchingServer(cf, tr, max_batch=args.max_batch,
+                            topn=args.topn)
+    server.start()
+    t0 = time.perf_counter()
+    futs = [server.submit(int(u)) for u in
+            np.random.default_rng(0).integers(0, args.users, args.requests)]
+    res = [f.result(timeout=120) for f in futs]
+    dt = time.perf_counter() - t0
+    server.stop()
+    lat = sorted(r.latency_ms for r in res)
+    print(f"{len(res)} requests, {len(res) / dt:.0f} req/s, "
+          f"p50 {lat[len(lat) // 2]:.1f} ms, "
+          f"p99 {lat[int(0.99 * len(lat))]:.1f} ms, "
+          f"{server.n_batches} batches")
+
+
+if __name__ == "__main__":
+    main()

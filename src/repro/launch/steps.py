@@ -1,0 +1,301 @@
+"""Step builders: (arch × shape-cell × mesh) → a lowerable jitted callable.
+
+Each builder returns a ``StepPlan``: the step function, example inputs
+(ShapeDtypeStructs — nothing allocated), and explicit in/out shardings.
+``dryrun.py`` lowers these; ``train.py``/``serve.py`` execute them with real
+arrays at reduced scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeCell, input_specs
+from repro.distributed import sharding as shd
+from repro.models import transformer as tx
+from repro.training.optimizer import get_optimizer
+
+i32 = jnp.int32
+f32 = jnp.float32
+
+
+@dataclasses.dataclass
+class StepPlan:
+    name: str
+    fn: Callable
+    example_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    flops_note: str = ""
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, shd._sanitize(mesh, spec))
+
+
+def build_step(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> StepPlan:
+    if arch.kind == "lm":
+        return _lm_step(arch, cell, mesh)
+    if arch.kind == "gnn":
+        return _gnn_step(arch, cell, mesh)
+    if arch.kind == "recsys":
+        return _recsys_step(arch, cell, mesh)
+    if arch.kind == "cf":
+        return _cf_step(arch, cell, mesh)
+    raise ValueError(arch.kind)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_step(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> StepPlan:
+    cfg = arch.config
+    sc = shd.make_ctx(mesh)
+    baxes = shd.batch_axes(mesh)
+    pspecs = tx.param_specs(cfg)
+    params_sh = shd.to_shardings(mesh, pspecs)
+    params_shapes = jax.eval_shape(
+        lambda: tx.init_params(cfg, jax.random.PRNGKey(0)))
+    inputs = input_specs(arch, cell)
+
+    if cell.step == "train":
+        opt = get_optimizer(arch.optimizer)
+        opt_specs = opt.state_specs(pspecs)
+        opt_sh = shd.to_shardings(mesh, opt_specs)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        batch_sh = {"tokens": _ns(mesh, P(baxes, None)),
+                    "labels": _ns(mesh, P(baxes, None))}
+        mb = cfg.microbatch
+
+        if mb == 1:
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: tx.loss_fn(cfg, p, batch, sc))(params)
+                params, opt_state = opt.update(params, grads, opt_state)
+                return params, opt_state, loss
+        else:
+            # gradient accumulation: scan over µbatches, mean the grads —
+            # bounds activation live-set to one µbatch (see §Perf iter 2)
+            def step(params, opt_state, batch):
+                bsz, seq = batch["tokens"].shape
+                toks = batch["tokens"].reshape(mb, bsz // mb, seq)
+                labs = batch["labels"].reshape(mb, bsz // mb, seq)
+
+                def ubatch(carry, xs):
+                    gacc, ltot = carry
+                    t, l = xs
+                    loss, g = jax.value_and_grad(
+                        lambda p: tx.loss_fn(
+                            cfg, p, {"tokens": t, "labels": l}, sc))(params)
+                    gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                    return (gacc, ltot + loss), ()
+
+                zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+                (gacc, ltot), _ = jax.lax.scan(
+                    ubatch, (zeros, jnp.float32(0.0)), (toks, labs))
+                grads = jax.tree_util.tree_map(lambda x: x / mb, gacc)
+                params, opt_state = opt.update(params, grads, opt_state)
+                return params, opt_state, ltot / mb
+
+        return StepPlan(
+            name=f"{arch.name}:{cell.name}", fn=step,
+            example_args=(params_shapes, opt_shapes, inputs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _ns(mesh, P())),
+            donate_argnums=(0, 1))
+
+    if cell.step == "prefill":
+        tok_sh = {"tokens": _ns(mesh, P(baxes, None))}
+        cache_sh = shd.to_shardings(mesh, tx.cache_specs(cfg, baxes))
+
+        def step(params, batch):
+            return tx.prefill(cfg, params, batch["tokens"], sc)
+
+        return StepPlan(
+            name=f"{arch.name}:{cell.name}", fn=step,
+            example_args=(params_shapes, inputs),
+            in_shardings=(params_sh, tok_sh),
+            out_shardings=(_ns(mesh, P(baxes, "model")), cache_sh))
+
+    # decode
+    cache_sh = shd.to_shardings(mesh, tx.cache_specs(cfg, baxes))
+    in_sh = (params_sh,
+             {"tokens": _ns(mesh, P(baxes, None)), "cache": cache_sh})
+
+    def step(params, batch):
+        return tx.decode_step(cfg, params, batch["tokens"], batch["cache"],
+                              sc)
+
+    return StepPlan(
+        name=f"{arch.name}:{cell.name}", fn=step,
+        example_args=(params_shapes, inputs),
+        in_shardings=in_sh,
+        out_shardings=(_ns(mesh, P(baxes, "model")), cache_sh),
+        donate_argnums=())
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def _gnn_step(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> StepPlan:
+    from repro.models import egnn as eg
+    import dataclasses as dc
+    cfg = dc.replace(arch.config, d_feat=cell.dims["d_feat"])
+    inputs = input_specs(arch, cell)
+    sc = shd.make_ctx(mesh, dp_over_all=True)
+    baxes = shd.batch_axes(mesh)
+    opt = get_optimizer(arch.optimizer)
+    pspecs = eg.param_specs(cfg)
+    params_sh = shd.to_shardings(mesh, pspecs)
+    params_shapes = jax.eval_shape(
+        lambda: eg.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_sh = shd.to_shardings(mesh, opt.state_specs(pspecs))
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+
+    if cell.name == "molecule":
+        batch_sh = {k: _ns(mesh, P(baxes, *((None,) * (len(v.shape) - 1))))
+                    for k, v in inputs.items()}
+        shard_edges = False
+    else:
+        # nodes replicated, edge list sharded over every device
+        eaxes = tuple(mesh.axis_names)
+        batch_sh = {
+            "feat": _ns(mesh, P(None, None)),
+            "coord": _ns(mesh, P(None, None)),
+            "edges": _ns(mesh, P(None, eaxes)),
+            "labels": _ns(mesh, P(None)),
+        }
+        shard_edges = True
+        sc = dc.replace(sc, batch=eaxes)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: eg.loss_fn(cfg, p, batch, sc,
+                                 shard_edges=shard_edges))(params)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return StepPlan(
+        name=f"{arch.name}:{cell.name}", fn=step,
+        example_args=(params_shapes, opt_shapes, inputs),
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh, _ns(mesh, P())),
+        donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def _recsys_step(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> StepPlan:
+    model = importlib.import_module(f"repro.models.{arch.model}")
+    cfg = arch.config
+    sc = shd.make_ctx(mesh, dp_over_all=True)
+    aaxes = tuple(mesh.axis_names)
+    inputs = input_specs(arch, cell)
+    pspecs = model.param_specs(cfg, aaxes) if arch.model != "bert4rec" \
+        else model.param_specs(cfg)
+    params_sh = shd.to_shardings(mesh, pspecs)
+    params_shapes = jax.eval_shape(
+        lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def batch_shard(v):
+        if v.shape and v.shape[0] > 1 and v.shape[0] % 512 == 0:
+            return _ns(mesh, P(aaxes, *((None,) * (len(v.shape) - 1))))
+        return _ns(mesh, P(*((None,) * len(v.shape))))
+
+    batch_sh = {k: batch_shard(v) for k, v in inputs.items()}
+
+    if cell.step == "train":
+        opt = get_optimizer(arch.optimizer)
+        opt_sh = shd.to_shardings(mesh, opt.state_specs(pspecs))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss_fn(cfg, p, batch, mesh, sc))(params)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, loss
+
+        return StepPlan(
+            name=f"{arch.name}:{cell.name}", fn=step,
+            example_args=(params_shapes, opt_shapes, inputs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _ns(mesh, P())),
+            donate_argnums=(0, 1))
+
+    if cell.step == "serve":
+        fwd = model.serve_scores if arch.model == "bert4rec" \
+            else model.forward
+
+        def step(params, batch):
+            return fwd(cfg, params, batch, mesh, sc)
+
+        out_spec = P(aaxes, None) if arch.model == "bert4rec" else P(aaxes)
+        return StepPlan(
+            name=f"{arch.name}:{cell.name}", fn=step,
+            example_args=(params_shapes, inputs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=_ns(mesh, out_spec))
+
+    # retrieval
+    def step(params, batch):
+        return model.retrieval_score(cfg, params, batch, mesh, sc)
+
+    return StepPlan(
+        name=f"{arch.name}:{cell.name}", fn=step,
+        example_args=(params_shapes, inputs),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=_ns(mesh, P(aaxes)))
+
+
+# ---------------------------------------------------------------------------
+# CF (the paper's own architecture; runs on the flat 1-axis mesh)
+# ---------------------------------------------------------------------------
+
+def _cf_step(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> StepPlan:
+    from repro.core import engine
+    cfg = arch.config
+    inputs = input_specs(arch, cell)
+    axis = mesh.axis_names[0]
+    rat_sh = {"ratings": _ns(mesh, P(axis, None))}
+    topk_sh = _ns(mesh, P(axis, None))
+
+    if cell.step == "cf_fit":
+        fit_engine = engine.sharded_topk if cfg.engine == "sharded" \
+            else engine.ring_sharded_topk
+
+        def step(batch):
+            return fit_engine(
+                batch["ratings"], cfg.top_k, mesh, measure=cfg.measure,
+                axis=axis, block_size=cfg.block_size)
+
+        return StepPlan(
+            name=f"{arch.name}:{cell.name}", fn=step,
+            example_args=(inputs,), in_shardings=(rat_sh,),
+            out_shardings=(topk_sh, topk_sh))
+
+    # cf_predict
+    u = cell.dims["users"]
+    k = cfg.top_k
+
+    def step(batch, scores, idx):
+        return engine.ring_sharded_predict(batch["ratings"], scores, idx,
+                                           mesh, axis=axis)
+
+    return StepPlan(
+        name=f"{arch.name}:{cell.name}", fn=step,
+        example_args=(inputs,
+                      jax.ShapeDtypeStruct((u, k), f32),
+                      jax.ShapeDtypeStruct((u, k), i32)),
+        in_shardings=(rat_sh, topk_sh, topk_sh),
+        out_shardings=_ns(mesh, P(axis, None)))

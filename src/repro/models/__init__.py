@@ -1,0 +1,1 @@
+"""Model zoo: LM transformers, EGNN, and the recsys family."""

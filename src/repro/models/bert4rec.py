@@ -1,0 +1,157 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690) — bidirectional sequential recsys.
+
+Masked-item modeling over user interaction sequences: learned positions,
+post-LN transformer blocks with GELU FFN (original BERT recipe), tied
+item-embedding output head.  This is the paper's *model-based* counterpart:
+where UserCF predicts from explicit neighbor users, BERT4Rec encodes the
+user's own sequence — the framework serves both through the same batched
+serving tier (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ShardingCtx, NO_SHARDING
+
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 3706             # ML-1M catalogue
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff_mult: int = 4
+    mask_token: int = 3706          # == n_items (vocab = n_items + 2)
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 2     # + mask + padding
+
+    @property
+    def d_ff(self) -> int:
+        return self.embed_dim * self.d_ff_mult
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 4 * d + 2 * d * self.d_ff + self.d_ff + d \
+            + 4 * d
+        return self.vocab * d + self.seq_len * d \
+            + self.n_blocks * per_block + 2 * d + self.vocab
+
+
+def _block_init(cfg: BERT4RecConfig, key):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": cm.dense_init(ks[0], d, d, bias=True),
+        "wk": cm.dense_init(ks[1], d, d, bias=True),
+        "wv": cm.dense_init(ks[2], d, d, bias=True),
+        "wo": cm.dense_init(ks[3], d, d, bias=True),
+        "ln1": cm.layernorm_init(d),
+        "w1": cm.dense_init(ks[4], d, cfg.d_ff, bias=True),
+        "w2": cm.dense_init(ks[5], cfg.d_ff, d, bias=True),
+        "ln2": cm.layernorm_init(d),
+    }
+
+
+def init_params(cfg: BERT4RecConfig, key) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    keys = jax.random.split(k4, cfg.n_blocks)
+    return {
+        "item_embed": jax.random.normal(
+            k1, (cfg.vocab, cfg.embed_dim), jnp.float32) * 0.02,
+        "pos_embed": jax.random.normal(
+            k2, (cfg.seq_len, cfg.embed_dim), jnp.float32) * 0.02,
+        "ln_in": cm.layernorm_init(cfg.embed_dim),
+        "blocks": [_block_init(cfg, k) for k in keys],
+        "out_bias": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+
+
+def param_specs(cfg: BERT4RecConfig,
+                batch_axes=("pod", "data", "model")) -> Dict:
+    rep2 = P(None, None)
+    ln = {"scale": P(None), "bias": P(None)}
+    blk = {"wq": cm.dense_specs(bias=True, w_spec=rep2),
+           "wk": cm.dense_specs(bias=True, w_spec=rep2),
+           "wv": cm.dense_specs(bias=True, w_spec=rep2),
+           "wo": cm.dense_specs(bias=True, w_spec=rep2),
+           "ln1": ln,
+           "w1": cm.dense_specs(bias=True, w_spec=rep2),
+           "w2": cm.dense_specs(bias=True, w_spec=rep2),
+           "ln2": ln}
+    return {
+        "item_embed": rep2,
+        "pos_embed": rep2,
+        "ln_in": ln,
+        "blocks": [blk for _ in range(cfg.n_blocks)],
+        "out_bias": P(None),
+    }
+
+
+def encode(cfg: BERT4RecConfig, params, items: jnp.ndarray,
+           sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """items (B, S) int32 (0 = padding) → hidden (B, S, D)."""
+    b, s = items.shape
+    d = cfg.embed_dim
+    h = jnp.take(params["item_embed"], items, axis=0) \
+        + params["pos_embed"][None, :s]
+    h = cm.layernorm(params["ln_in"], h)
+    pad_mask = items > 0                                       # (B, S)
+
+    for blk in params["blocks"]:
+        q = cm.dense(blk["wq"], h).reshape(b, s, cfg.n_heads, -1)
+        k = cm.dense(blk["wk"], h).reshape(b, s, cfg.n_heads, -1)
+        v = cm.dense(blk["wv"], h).reshape(b, s, cfg.n_heads, -1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(q.shape[-1])
+        logits = jnp.where(pad_mask[:, None, None, :], logits, cm.NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, d)
+        h = cm.layernorm(blk["ln1"], h + cm.dense(blk["wo"], att))
+        ff = cm.dense(blk["w2"], jax.nn.gelu(cm.dense(blk["w1"], h)))
+        h = cm.layernorm(blk["ln2"], h + ff)
+    return h
+
+
+def logits_fn(cfg: BERT4RecConfig, params, hidden: jnp.ndarray):
+    return hidden @ params["item_embed"].T + params["out_bias"]
+
+
+def loss_fn(cfg: BERT4RecConfig, params, batch: Dict,
+            mesh: Mesh | None = None,
+            sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """Masked-item NLL.  batch: {items (B,S), labels (B,S) with -1 ignore}."""
+    h = encode(cfg, params, batch["items"], sc)
+    labels = batch["labels"]
+    logits = logits_fn(cfg, params, h).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lab = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def serve_scores(cfg: BERT4RecConfig, params, batch: Dict,
+                 mesh: Mesh | None = None,
+                 sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """Next-item scores at the final position: (B, vocab)."""
+    h = encode(cfg, params, batch["items"], sc)
+    return logits_fn(cfg, params, h[:, -1])
+
+
+def retrieval_score(cfg: BERT4RecConfig, params, batch: Dict,
+                    mesh: Mesh | None = None,
+                    sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """One user's final hidden state dotted with N candidate item ids."""
+    h = encode(cfg, params, batch["items"], sc)[0, -1]         # (D,)
+    cand_vecs = jnp.take(params["item_embed"], batch["candidates"], axis=0)
+    return cand_vecs @ h + params["out_bias"][batch["candidates"]]

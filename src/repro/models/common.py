@@ -1,0 +1,290 @@
+"""Shared neural-net building blocks (pure JAX, functional params).
+
+Parameters are nested dicts of arrays.  Every init function has a matching
+``*_specs`` producing a pytree of ``PartitionSpec`` with identical structure,
+so models can be sharded by zipping the two trees (see
+``repro.distributed.sharding``).
+
+The attention here is the XLA path used for CPU validation and the compile
+dry-run: a flash-style chunked online-softmax written with ``lax.scan`` so
+the (Sq × Skv) score matrix never materialises.  On real TPU the Pallas
+kernel in ``repro.kernels.flash_attention`` replaces it (same math, same
+oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Initializer = jax.nn.initializers.Initializer
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+# -- params -------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    k1, _ = jax.random.split(key)
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(k1, (d_in, d_out), dtype) * std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_specs(*, bias: bool = False, w_spec=P(None, None)):
+    p = {"w": w_spec}
+    if bias:
+        # bias follows the output dim of the weight spec
+        p["b"] = P(w_spec[-1])
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_init(k, dims[i], dims[i + 1], bias=bias,
+                                dtype=dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp_specs(n_layers: int, *, bias: bool = True, w_spec=P(None, None)):
+    return {f"l{i}": dense_specs(bias=bias, w_spec=w_spec)
+            for i in range(n_layers)}
+
+
+def mlp(p, x, *, act=jax.nn.relu, final_act=None):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# -- normalisation ------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * p["scale"]).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# -- rotary position embedding --------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, D) with D even; positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- chunked flash-style attention (XLA path) -----------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, scale: float | None = None,
+                      chunk_q: int = 1024, chunk_kv: int = 1024,
+                      bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Memory-efficient attention.  q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).
+
+    Online softmax over KV chunks inside a scan over Q chunks.  GQA handled
+    by folding the q-head group into the batch of einsums.  Queries align to
+    the END of the KV sequence (prefill: Sq == Skv; decode: Sq << Skv).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, skv)
+    q_off = skv - sq
+    sq0, skv0 = sq, skv
+    if sq % cq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, cq - sq % cq), (0, 0)))
+        sq = q.shape[2]
+    if skv % ck:
+        pad = ck - skv % ck
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        skv = k.shape[2]
+    nq, nk = sq // cq, skv // ck
+
+    qg = q.reshape(b, hkv, group, sq, d)
+    q_chunks = qg.reshape(b, hkv, group, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+    k_chunks = k.reshape(b, hkv, nk, ck, d).transpose(2, 0, 1, 3, 4)
+    v_chunks = v.reshape(b, hkv, nk, ck, dv).transpose(2, 0, 1, 3, 4)
+
+    def q_body(_, iq_and_chunk):
+        iq, qc = iq_and_chunk                      # qc: (b, hkv, group, cq, d)
+
+        @jax.checkpoint   # flash-style bwd: recompute scores, keep only carry
+        def kv_body(carry, ik_and_kv):
+            m_prev, l_prev, acc = carry
+            ik, kc, vc = ik_and_kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            kpos = ik * ck + jnp.arange(ck)
+            valid = kpos[None, :] < skv0
+            if causal:
+                qpos = q_off + iq * cq + jnp.arange(cq)
+                valid = valid & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(jnp.where(s == NEG_INF, NEG_INF, s - m_new))
+            alpha = jnp.exp(jnp.where(m_prev == NEG_INF, NEG_INF,
+                                      m_prev - m_new))
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                           vc.astype(jnp.float32))
+            return (m_new, l_new, acc), ()
+
+        init = (jnp.full((b, hkv, group, cq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, group, cq, 1), jnp.float32),
+                jnp.zeros((b, hkv, group, cq, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init, (jnp.arange(nk), k_chunks, v_chunks))
+        out = acc / jnp.maximum(l, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), q_chunks))
+    # outs: (nq, b, hkv, group, cq, d) → (b, hq, sq, d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, -1)
+    return out[:, :, :sq0]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                     scale: float | None = None) -> jnp.ndarray:
+    """Single-token decode.  q: (B, Hq, 1, D); caches: (B, Hkv, S, D).
+
+    Positions ≥ cache_len are masked.  Written as one masked softmax so the
+    SPMD partitioner can shard the cache's S axis (flash-decoding split-K:
+    the max/sum reductions become all-reduces over the sequence shards).
+    """
+    b, hq, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, d)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len[:, None]                  # (B, S)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# -- losses ---------------------------------------------------------------------
+
+def chunked_softmax_xent(h: jnp.ndarray, w_out: jnp.ndarray,
+                         labels: jnp.ndarray, *, chunk: int = 256,
+                         spec: Optional[P] = None) -> jnp.ndarray:
+    """Mean token NLL without materialising (B, S, V) logits.
+
+    ``h``: (B, S, D) final hidden states; ``w_out``: (D, V); ``labels``:
+    (B, S) int32 with -1 = ignore.  Scans S in chunks; per-chunk logits may
+    additionally be sharded over the vocab axis via ``spec``.
+    """
+    b, s, dm = h.shape
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"S={s} must divide chunk={c}")
+    n = s // c
+    hc = h.reshape(b, n, c, dm).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint   # recompute the logits chunk in bwd; never store it
+    def body(carry, hx):
+        tot, cnt = carry
+        hh, ll = hx
+        logits = (hh.astype(jnp.float32) @ w_out.astype(jnp.float32))
+        if spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, spec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.maximum(ll, 0)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        valid = (ll >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), ()
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# -- misc -----------------------------------------------------------------------
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Logical-axis → mesh-axis mapping threaded through the models."""
+    batch: tuple | str | None = ("pod", "data")   # DP axes
+    model: str | None = "model"                    # TP / EP / vocab axis
+    fsdp: str | None = "data"                      # param FSDP axis
+    enabled: bool = True
+    mesh: object | None = None                     # concrete Mesh (shard_map)
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint if sharding is enabled (no-op on 1 dev)."""
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+
+
+NO_SHARDING = ShardingCtx(batch=None, model=None, fsdp=None, enabled=False)

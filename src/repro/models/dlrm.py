@@ -1,0 +1,129 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — MLPerf Criteo-1TB config.
+
+bottom-MLP(dense 13) ∥ 26 embedding lookups → dot-interaction → top-MLP.
+Embeddings use the sharded all_to_all lookup (model parallel); the dense
+MLPs are pure data-parallel over every mesh axis — the canonical DLRM
+hybrid layout.  ``retrieval_score`` scores one context against N candidate
+ids by batching candidates through interaction+top-MLP (no loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models import embedding as emb
+from repro.models.common import ShardingCtx, NO_SHARDING
+
+# MLPerf DLRM v1 Criteo Terabyte per-field vocabulary sizes (26 fields)
+MLPERF_TABLE_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    field_sizes: Tuple[int, ...] = MLPERF_TABLE_SIZES
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    n_shards: int = 512
+    candidate_field: int = 0        # field whose ids are retrieval candidates
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.field_sizes)
+
+    def layout(self) -> emb.TableLayout:
+        return emb.TableLayout(field_sizes=self.field_sizes,
+                               embed_dim=self.embed_dim,
+                               n_shards=self.n_shards)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    def param_count(self) -> int:
+        n = self.layout().total_params()
+        dims = (self.n_dense,) + self.bot_mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1]
+                 for i in range(len(dims) - 1))
+        top_in = self.n_interact + self.bot_mlp[-1]
+        dims = (top_in,) + self.top_mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1]
+                 for i in range(len(dims) - 1))
+        return int(n)
+
+
+def init_params(cfg: DLRMConfig, key) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "tables": emb.init_tables(cfg.layout(), k1),
+        "bot": cm.mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": cm.mlp_init(
+            k3, (cfg.n_interact + cfg.bot_mlp[-1],) + cfg.top_mlp),
+    }
+
+
+def param_specs(cfg: DLRMConfig, batch_axes=("pod", "data", "model")) -> Dict:
+    rep = P(None, None)
+    return {
+        "tables": emb.table_specs(batch_axes),
+        "bot": cm.mlp_specs(len(cfg.bot_mlp), w_spec=rep),
+        "top": cm.mlp_specs(len(cfg.top_mlp), w_spec=rep),
+    }
+
+
+def _interact(bot_out: jnp.ndarray, sparse: jnp.ndarray) -> jnp.ndarray:
+    """Dot interaction.  bot_out (B, D); sparse (B, F, D) → (B, F*(F+1)/2)."""
+    z = jnp.concatenate([bot_out[:, None], sparse], axis=1)     # (B, F+1, D)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return zz[:, iu, ju]                                         # (B, nC2)
+
+
+def forward(cfg: DLRMConfig, params, batch: Dict, mesh: Mesh | None = None,
+            sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """batch: {dense (B, 13) f32, sparse (B, 26) i32} → logits (B,)."""
+    dense, sparse_idx = batch["dense"], batch["sparse"]
+    bot = cm.mlp(params["bot"], dense, act=jax.nn.relu,
+                 final_act=jax.nn.relu)
+    vecs = emb.sharded_lookup(cfg.layout(), params["tables"], sparse_idx,
+                              mesh)
+    feats = jnp.concatenate([_interact(bot, vecs), bot], axis=-1)
+    logit = cm.mlp(params["top"], feats, act=jax.nn.relu)
+    return logit[:, 0]
+
+
+def loss_fn(cfg: DLRMConfig, params, batch: Dict, mesh: Mesh | None = None,
+            sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    logits = forward(cfg, params, batch, mesh, sc)
+    labels = batch["labels"].astype(jnp.float32)
+    loss = jnp.maximum(logits, 0) - logits * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(loss)
+
+
+def retrieval_score(cfg: DLRMConfig, params, batch: Dict,
+                    mesh: Mesh | None = None,
+                    sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """Score 1 user context against N candidates (batched, no loop).
+
+    batch: {dense (1, 13), sparse (1, 26), candidates (N,) ids for
+    ``candidate_field``}.  Returns (N,) scores.
+    """
+    n = batch["candidates"].shape[0]
+    dense = jnp.broadcast_to(batch["dense"], (n, cfg.n_dense))
+    sparse = jnp.broadcast_to(batch["sparse"], (n, cfg.n_sparse))
+    sparse = sparse.at[:, cfg.candidate_field].set(batch["candidates"])
+    return forward(cfg, params, {"dense": dense, "sparse": sparse}, mesh, sc)

@@ -1,0 +1,132 @@
+"""Factorization Machines (Rendle, ICDM 2010) — 2-way interactions.
+
+The O(nk) sum-square identity  Σᵢ<ⱼ⟨vᵢ,vⱼ⟩xᵢxⱼ = ½‖Σᵢvᵢxᵢ‖² − ½Σᵢ‖vᵢxᵢ‖²
+is the same algebraic move as the CF core's fused Gram similarity (share the
+quadratic structure, never materialise the pair matrix).  ``retrieval_score``
+exploits the identity's decomposition over a user/candidate split so scoring
+10⁶ candidates is one batched dot — exactly the paper's "one active user
+against all items" at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import embedding as emb
+from repro.models.common import ShardingCtx, NO_SHARDING
+
+# Criteo-Kaggle-scale per-field vocabularies (39 fields, ~1M features);
+# dense fields are bucketised into small vocabularies (standard practice).
+CRITEO_39_SIZES = tuple([64] * 13) + (
+    1461, 584, 1000000, 800000, 306, 25, 12518, 634, 4, 93146,
+    5684, 900000, 3194, 28, 14993, 700000, 11, 5653, 2173, 4,
+    7046547 % 1000000, 19, 16, 200000, 105, 150000)
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    field_sizes: Tuple[int, ...] = CRITEO_39_SIZES
+    embed_dim: int = 10
+    n_shards: int = 512
+    candidate_field: int = 15       # a large "item-like" field
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.field_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return sum(self.field_sizes)
+
+    def layout(self) -> emb.TableLayout:
+        return emb.TableLayout(field_sizes=self.field_sizes,
+                               embed_dim=self.embed_dim,
+                               n_shards=self.n_shards)
+
+    def linear_layout(self) -> emb.TableLayout:
+        return emb.TableLayout(field_sizes=self.field_sizes, embed_dim=1,
+                               n_shards=self.n_shards)
+
+    def param_count(self) -> int:
+        return 1 + self.layout().total_params() \
+            + self.linear_layout().total_params()
+
+
+def init_params(cfg: FMConfig, key) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w0": jnp.zeros((1,), jnp.float32),
+        "linear": emb.init_tables(cfg.linear_layout(), k1),
+        "factors": emb.init_tables(cfg.layout(), k2),
+    }
+
+
+def param_specs(cfg: FMConfig, batch_axes=("pod", "data", "model")) -> Dict:
+    return {
+        "w0": P(None),
+        "linear": emb.table_specs(batch_axes),
+        "factors": emb.table_specs(batch_axes),
+    }
+
+
+def _fm_terms(v: jnp.ndarray) -> jnp.ndarray:
+    """v: (B, F, k) → (B,) pairwise-interaction term via sum-square trick."""
+    s = jnp.sum(v, axis=1)                       # (B, k)
+    s2 = jnp.sum(v * v, axis=1)                  # (B, k)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)
+
+
+def forward(cfg: FMConfig, params, batch: Dict, mesh: Mesh | None = None,
+            sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """batch: {sparse (B, 39) i32} → logits (B,)."""
+    idx = batch["sparse"]
+    lin = emb.sharded_lookup(cfg.linear_layout(), params["linear"], idx,
+                             mesh)[..., 0]       # (B, F)
+    v = emb.sharded_lookup(cfg.layout(), params["factors"], idx, mesh)
+    return params["w0"][0] + jnp.sum(lin, axis=-1) + _fm_terms(v)
+
+
+def loss_fn(cfg: FMConfig, params, batch: Dict, mesh: Mesh | None = None,
+            sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    logits = forward(cfg, params, batch, mesh, sc)
+    labels = batch["labels"].astype(jnp.float32)
+    loss = jnp.maximum(logits, 0) - logits * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(loss)
+
+
+def retrieval_score(cfg: FMConfig, params, batch: Dict,
+                    mesh: Mesh | None = None,
+                    sc: ShardingCtx = NO_SHARDING) -> jnp.ndarray:
+    """FM-factorised retrieval: user terms once + one batched dot.
+
+    score(c) = const(user) + w_c + ⟨Σᵤvᵤ, v_c⟩   for each candidate c.
+    batch: {sparse (1, 39), candidates (N,)}.  Returns (N,).
+    """
+    idx = batch["sparse"]
+    cand = batch["candidates"]                                  # (N,)
+    f = cfg.candidate_field
+    user_fields = [i for i in range(cfg.n_sparse) if i != f]
+
+    lin_u = emb.sharded_lookup(cfg.linear_layout(), params["linear"],
+                               idx[:, user_fields], None,
+                               fields=user_fields)[..., 0]
+    v_u = emb.sharded_lookup(cfg.layout(), params["factors"],
+                             idx[:, user_fields], None,
+                             fields=user_fields)[0]              # (F-1, k)
+    user_const = params["w0"][0] + jnp.sum(lin_u) + _fm_terms(v_u[None])[0]
+    v_sum_u = jnp.sum(v_u, axis=0)                              # (k,)
+
+    # candidate-side lookups: (N, 1) field batch through the sharded path
+    lin_c = emb.sharded_lookup(cfg.linear_layout(), params["linear"],
+                               cand[:, None], mesh,
+                               fields=[f])[..., 0, 0]            # (N,)
+    v_c = emb.sharded_lookup(cfg.layout(), params["factors"],
+                             cand[:, None], mesh, fields=[f])[:, 0]  # (N, k)
+    return user_const + lin_c + v_c @ v_sum_u

@@ -1,0 +1,113 @@
+"""Batched serving tier for recommendation requests.
+
+Requests enqueue individually; a background batcher drains up to
+``max_batch`` (or waits ``max_wait_ms``), pads user indices into a fixed
+batch, runs the predictor once, and resolves per-request futures with
+top-n items.  This is the serve_p99 pattern: the fixed padded batch keeps
+one compiled executable hot regardless of arrival pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predict import predict_from_neighbors, recommend_topn
+
+
+@dataclasses.dataclass
+class Recommendation:
+    user: int
+    items: np.ndarray
+    scores: np.ndarray
+    latency_ms: float
+
+
+class BatchingServer:
+    def __init__(self, cf_model, ratings, *, max_batch: int = 16,
+                 max_wait_ms: float = 20.0, topn: int = 10):
+        if cf_model.state is None:
+            raise ValueError("fit the model first")
+        self.cf = cf_model
+        self.ratings = ratings
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.topn = topn
+        self.n_batches = 0
+        self._q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+        st = self.cf.state
+
+        @jax.jit
+        def _predict_users(users):
+            scores = st.scores[users]
+            idx = st.idx[users]
+            qmeans = st.means[users]
+            pred = predict_from_neighbors(self.ratings, scores, idx,
+                                          means=st.means, query_means=qmeans)
+            seen = self.ratings[users] > 0
+            return recommend_topn(pred, seen, self.topn)
+
+        self._predict = _predict_users
+        # warm the executable with the padded batch shape
+        self._predict(jnp.zeros((self.max_batch,), jnp.int32))
+
+    # -- public API --------------------------------------------------------
+    def submit(self, user: int) -> Future:
+        fut: Future = Future()
+        self._q.put((user, time.perf_counter(), fut))
+        return fut
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=10)
+
+    # -- batcher -----------------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            batch: List = []
+            deadline = None
+            while len(batch) < self.max_batch:
+                timeout = self.max_wait if deadline is None else \
+                    max(deadline - time.perf_counter(), 0)
+                try:
+                    item = self._q.get(timeout=max(timeout, 1e-3))
+                except queue.Empty:
+                    break
+                batch.append(item)
+                if deadline is None:
+                    deadline = time.perf_counter() + self.max_wait
+                if time.perf_counter() >= deadline:
+                    break
+            if not batch:
+                continue
+            self._run_batch(batch)
+
+    def _run_batch(self, batch):
+        self.n_batches += 1
+        users = np.zeros((self.max_batch,), np.int32)
+        for j, (u, _, _) in enumerate(batch):
+            users[j] = u
+        scores, items = self._predict(jnp.asarray(users))
+        scores = np.asarray(scores)
+        items = np.asarray(items)
+        now = time.perf_counter()
+        for j, (u, t0, fut) in enumerate(batch):
+            fut.set_result(Recommendation(
+                user=u, items=items[j], scores=scores[j],
+                latency_ms=(now - t0) * 1e3))

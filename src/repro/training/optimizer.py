@@ -1,0 +1,124 @@
+"""Sharded optimizers (pure JAX, no external deps).
+
+States mirror the parameter pytree, so the parameter PartitionSpec tree
+shards them too (ZeRO-style: optimizer state lives wherever its param shard
+lives).  AdamW for the LM family, Adagrad for recsys embeddings (the MLPerf
+DLRM choice — one state tensor keeps huge tables affordable), SGD for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    state_specs: Callable[[Any], Any]    # param spec tree → state spec tree
+
+
+def _tree_zeros_like(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = _tree_zeros_like(params)
+        return st
+
+    def update(params, grads, state):
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads)
+            params = jax.tree_util.tree_map(
+                lambda p, m: p - lr * m, params, mu)
+            return params, {"step": state["step"] + 1, "mu": mu}
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                        params, grads)
+        return params, {"step": state["step"] + 1}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+        st = {"step": P()}
+        if momentum:
+            st["mu"] = param_specs
+        return st
+
+    return Optimizer(init, update, state_specs)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float | None = 1.0) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tree_zeros_like(params),
+                "v": _tree_zeros_like(params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        if grad_clip is not None:
+            gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree_util.tree_leaves(grads))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                             + weight_decay * p)
+
+        params = jax.tree_util.tree_map(upd, params, m, v)
+        return params, {"step": step, "m": m, "v": v}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+        return {"step": P(), "m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adagrad(lr: float = 1e-2, eps: float = 1e-8) -> Optimizer:
+    """MLPerf-DLRM's embedding optimizer: one accumulator per param."""
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "acc": _tree_zeros_like(params)}
+
+    def update(params, grads, state):
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g), state["acc"], grads)
+        params = jax.tree_util.tree_map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps),
+            params, grads, acc)
+        return params, {"step": state["step"] + 1, "acc": acc}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+        return {"step": P(), "acc": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, lr: float | None = None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr or 3e-4)
+    if name == "adagrad":
+        return adagrad(lr or 1e-2)
+    if name == "sgd":
+        return sgd(lr or 1e-2)
+    raise ValueError(f"unknown optimizer {name!r}")

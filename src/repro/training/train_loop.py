@@ -1,0 +1,136 @@
+"""Fault-tolerant training loop: checkpoint/restart, stragglers, recovery.
+
+The loop is model-agnostic: it drives any ``(params, opt_state, batch) →
+(params, opt_state, loss)`` step built by ``repro.launch.steps``.  Failures
+(real exceptions or injected drills) trigger restore-from-latest-committed
+and continue; persistent stragglers escalate.  This is the component the
+multi-pod launcher wraps per host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.fault_tolerance import (FaultInjector, RecoveryPolicy,
+                                               StragglerWatchdog)
+from repro.training.compression import (compress_decompress,
+                                        init_compression)
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    grad_compression: bool = False
+    max_restarts: int = 3
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: List[float]
+    restarts: int
+    straggler_steps: List[int]
+    final_step: int
+    params: Any
+    opt_state: Any
+
+
+def run(step_fn: Callable, params: Any, opt_state: Any,
+        batches: Iterator[Dict], cfg: TrainLoopConfig,
+        injector: Optional[FaultInjector] = None,
+        on_step: Optional[Callable[[int, float], None]] = None
+        ) -> TrainResult:
+    """Run the loop; ``step_fn(params, opt_state, batch)`` must be jitted.
+
+    With ``cfg.checkpoint_dir`` set, the loop resumes from the latest
+    committed step automatically (restart semantics) and recovers from
+    failures mid-run.  ``batches`` must be restartable by step index:
+    it is called as ``batches(step)``.
+    """
+    watchdog = StragglerWatchdog()
+    policy = RecoveryPolicy(max_restarts=cfg.max_restarts)
+    saver = ckpt.AsyncCheckpointer(cfg.checkpoint_dir,
+                                   keep=cfg.keep_checkpoints) \
+        if cfg.checkpoint_dir else None
+
+    start = 0
+    if cfg.checkpoint_dir:
+        latest = ckpt.latest_step(cfg.checkpoint_dir)
+        if latest is not None:
+            state = ckpt.restore(cfg.checkpoint_dir, latest,
+                                 {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = latest
+    losses: List[float] = []
+
+    step = start
+    while step < cfg.total_steps:
+        try:
+            t0 = time.perf_counter()
+            if injector is not None:
+                injector.check(step)
+            batch = batches(step)
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            loss = float(jax.block_until_ready(loss))
+            dt = time.perf_counter() - t0
+            losses.append(loss)
+            if watchdog.observe(step, dt) and watchdog.needs_escalation:
+                # report persistent straggler to the launcher (simulated)
+                pass
+            if on_step:
+                on_step(step, loss)
+            step += 1
+            if saver and step % cfg.checkpoint_every == 0:
+                saver.save(step, {"params": params, "opt": opt_state})
+        except Exception:
+            if saver is None or not policy.should_restart():
+                raise
+            saver.wait()
+            latest = ckpt.latest_step(cfg.checkpoint_dir)
+            if latest is None:
+                raise
+            state = ckpt.restore(cfg.checkpoint_dir, latest,
+                                 {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            step = latest
+
+    if saver:
+        saver.save(cfg.total_steps, {"params": params, "opt": opt_state})
+        saver.wait()
+    return TrainResult(losses=losses, restarts=policy.restarts - 1
+                       if policy.restarts else 0,
+                       straggler_steps=watchdog.flagged_steps,
+                       final_step=step, params=params, opt_state=opt_state)
+
+
+def make_train_step(loss_fn: Callable, optimizer, *,
+                    compression: bool = False) -> Callable:
+    """Standard step factory: value_and_grad → (compress) → update.
+
+    With compression the state is ``{"opt": <optimizer state>, "ef":
+    <error-feedback residuals>}`` (build the ``ef`` part with
+    ``init_compression(params)``).
+    """
+    if not compression:
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+            params, opt_state = optimizer.update(params, grads, opt_state)
+            return params, opt_state, loss
+        return step
+
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch))(params)
+        grads, ef = compress_decompress(grads, state["ef"])
+        params, opt_state = optimizer.update(params, grads, state["opt"])
+        return params, {"opt": opt_state, "ef": ef}, loss
+    return step

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
+count (1 CPU); multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def ml_small():
+    """Small synthetic MovieLens split shared across tests."""
+    from repro.data import load_ml1m_synthetic
+    train, test, spec = load_ml1m_synthetic(n_users=384, n_items=300, seed=0)
+    return train, test, spec
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,84 @@
+"""Data substrate: generator marginals, splits, neighbor sampler."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (GraphSpec, MovieLensSpec, NeighborSampler,
+                        generate_ratings, synthetic_graph, train_test_split)
+from repro.data.graph import _to_csr
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+def test_movielens_marginals():
+    spec = MovieLensSpec().scaled(1024, 512)
+    r = generate_ratings(spec)
+    vals = r[r > 0]
+    assert r.shape == (1024, 512)
+    assert set(np.unique(vals)) <= {1.0, 2.0, 3.0, 4.0, 5.0}
+    assert 3.2 < vals.mean() < 3.9          # ML-1M global mean ≈ 3.58
+    assert 0.9 < vals.std() < 1.3           # ≈ 1.12
+    per_user = (r > 0).sum(1)
+    assert per_user.min() >= spec.min_user_ratings
+    # power-law item popularity: top 1% of items ≫ median
+    pop = np.sort((r > 0).sum(0))[::-1]
+    assert pop[:5].mean() > 5 * np.median(pop[pop > 0])
+
+
+def test_movielens_deterministic():
+    spec = MovieLensSpec().scaled(128, 64)
+    np.testing.assert_array_equal(generate_ratings(spec),
+                                  generate_ratings(spec))
+
+
+def test_split_properties():
+    spec = MovieLensSpec().scaled(256, 128)
+    r = generate_ratings(spec)
+    train, test = train_test_split(r, test_fraction=0.1, seed=3)
+    # disjoint, union preserved
+    assert not ((train > 0) & (test > 0)).any()
+    np.testing.assert_array_equal((train + test), r)
+    n = (r > 0).sum()
+    assert abs((test > 0).sum() - 0.1 * n) < 0.02 * n
+    assert ((train > 0).sum(axis=1) >= 1).all()   # nobody fully stripped
+
+
+@given(seed=st.integers(0, 1000))
+def test_sampler_edges_exist_in_graph(seed):
+    g = synthetic_graph(GraphSpec(n_nodes=200, n_edges=1500, d_feat=8,
+                                  seed=seed))
+    s = NeighborSampler(g["edges"], 200, fanouts=(4, 3), seed=seed)
+    seeds = np.arange(10)
+    sub = s.sample(seeds, g["feat"], g["coord"], g["labels"])
+    true_edges = set(map(tuple, g["edges"].T.tolist()))
+    # every non-padding sampled edge maps back to a real graph edge
+    n_real = 0
+    for src, dst in sub["edges"].T:
+        if src == 0 and dst == 0:
+            continue
+        n_real += 1
+    assert n_real > 0
+    # fanout bound: ≤ 10*4 + 10*4*3 edges
+    assert n_real <= 10 * 4 + 10 * 4 * 3
+    # seeds keep their labels; non-seed budget rows are -1 or real labels
+    np.testing.assert_array_equal(sub["labels"][:10], g["labels"][:10])
+
+
+def test_sampler_static_shapes():
+    g = synthetic_graph(GraphSpec(n_nodes=300, n_edges=2000, d_feat=4))
+    s = NeighborSampler(g["edges"], 300, fanouts=(5, 2), seed=0)
+    shapes = set()
+    for start in (0, 50, 100):
+        sub = s.sample(np.arange(start, start + 8), g["feat"], g["coord"],
+                       g["labels"])
+        shapes.add(tuple(sorted((k, v.shape) for k, v in sub.items())))
+    assert len(shapes) == 1                  # jit-stable shapes
+
+
+def test_csr_roundtrip():
+    edges = np.asarray([[0, 1, 2, 0], [1, 1, 0, 2]], np.int32)
+    indptr, nbrs = _to_csr(edges, 3)
+    assert indptr.tolist() == [0, 1, 3, 4]
+    assert sorted(nbrs[1:3].tolist()) == [0, 1]   # in-neighbors of node 1

@@ -1,0 +1,105 @@
+"""Pallas kernels vs jnp oracles (interpret mode) with shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.similarity import fused_similarity
+
+settings.register_profile("kernels", deadline=None, max_examples=10)
+settings.load_profile("kernels")
+
+
+# -- fused similarity -----------------------------------------------------------
+
+@given(m=st.integers(3, 40), n=st.integers(3, 40), d=st.integers(5, 80),
+       seed=st.integers(0, 9999))
+def test_similarity_kernel_shape_sweep(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    ra = (rng.integers(1, 6, (m, d)) * (rng.random((m, d)) < 0.4)
+          ).astype(np.float32)
+    rb = (rng.integers(1, 6, (n, d)) * (rng.random((n, d)) < 0.4)
+          ).astype(np.float32)
+    got = fused_similarity(jnp.asarray(ra), jnp.asarray(rb), measure="all",
+                           bm=16, bn=16, bk=32, interpret=True)
+    want = ref.similarity_ref(jnp.asarray(ra), jnp.asarray(rb), "all")
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("measure", ["jaccard", "cosine", "pcc"])
+def test_similarity_kernel_dtypes(dtype, measure, rng):
+    ra = jnp.asarray((rng.integers(1, 6, (33, 65))
+                      * (rng.random((33, 65)) < 0.4))).astype(dtype)
+    rb = jnp.asarray((rng.integers(1, 6, (17, 65))
+                      * (rng.random((17, 65)) < 0.4))).astype(dtype)
+    got = fused_similarity(ra, rb, measure=measure, bm=16, bn=16, bk=32,
+                           interpret=True)
+    want = ref.similarity_ref(ra.astype(jnp.float32),
+                              rb.astype(jnp.float32), measure)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-2)
+
+
+# -- flash attention ------------------------------------------------------------
+
+@given(b=st.integers(1, 3), hkv=st.sampled_from([1, 2]),
+       group=st.sampled_from([1, 2, 4]), sq=st.sampled_from([32, 64]),
+       d=st.sampled_from([16, 32]), causal=st.booleans(),
+       seed=st.integers(0, 9999))
+def test_flash_attention_sweep(b, hkv, group, sq, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (b, hkv * group, sq, d))
+                    .astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, sq, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, sq, d)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, bq=16, bk=16,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_decode_and_mla_dims(rng):
+    # decode: sq=1 against long kv; MLA: dv != dqk
+    q = jnp.asarray(rng.normal(0, 1, (2, 4, 1, 24)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 128, 24)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 128, 16)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, bq=1, bk=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 32))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 32))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 32))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+# -- embedding bag ----------------------------------------------------------------
+
+@given(v=st.integers(8, 200), d=st.sampled_from([8, 16]),
+       b=st.integers(1, 8), l=st.integers(1, 6),
+       combiner=st.sampled_from(["sum", "mean"]), seed=st.integers(0, 9999))
+def test_embedding_bag_sweep(v, d, b, l, combiner, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(0, 1, (v, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, v, (b, l)).astype(np.int32))
+    got = embedding_bag(table, idx, combiner=combiner, interpret=True)
+    want = ref.embedding_bag_ref(table, idx, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_embedding_bag_all_padding(rng):
+    table = jnp.asarray(rng.normal(0, 1, (10, 8)).astype(np.float32))
+    idx = jnp.full((2, 3), -1, jnp.int32)
+    got = embedding_bag(table, idx, combiner="mean", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 0.0)

@@ -1,0 +1,79 @@
+"""Top-k selection, merge algebra, and the rating predictor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import neighbors as nb
+from repro.core import predict as pr
+from repro.core import similarity as sim
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 99999), k=st.integers(1, 8))
+def test_merge_topk_is_order_invariant(seed, k):
+    """The canonical merge must commute — the exactness guarantee."""
+    rng = np.random.default_rng(seed)
+    m = 4
+    sa = jnp.asarray(rng.choice([0.1, 0.5, 0.9], (m, 6)))   # force ties
+    ia = jnp.asarray(rng.choice(100, (m, 6), replace=False))
+    sb = jnp.asarray(rng.choice([0.1, 0.5, 0.9], (m, 5)))
+    ib = jnp.asarray(100 + rng.choice(100, (m, 5), replace=False))
+    s1, i1 = nb.merge_topk(sa, ia.astype(jnp.int32),
+                           sb, ib.astype(jnp.int32), k)
+    s2, i2 = nb.merge_topk(sb, ib.astype(jnp.int32),
+                           sa, ia.astype(jnp.int32), k)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_block_topk_matches_full_sort(rng):
+    r = (rng.integers(1, 6, (64, 48))
+         * (rng.random((64, 48)) < 0.5)).astype(np.float32)
+    r = jnp.asarray(r)
+    scores, idx = nb.topk_neighbors(r, 5, measure="cosine", block_size=16)
+    full = np.array(sim.pairwise_similarity(r, r, "cosine"))
+    np.fill_diagonal(full, -np.inf)
+    for u in range(64):
+        want = np.sort(full[u])[::-1][:5]
+        np.testing.assert_allclose(np.asarray(scores)[u], want, atol=1e-5)
+
+
+def test_block_topk_excludes_self(rng):
+    r = jnp.asarray((rng.integers(1, 6, (32, 20))).astype(np.float32))
+    _, idx = nb.topk_neighbors(r, 4, measure="jaccard", block_size=8)
+    idx = np.asarray(idx)
+    for u in range(32):
+        assert u not in idx[u]
+
+
+def test_predict_gather_matches_dense_oracle(ml_small):
+    train, _, _ = ml_small
+    r = jnp.asarray(train[:128, :100])
+    scores, idx = nb.topk_neighbors(r, 10, measure="pcc", block_size=32)
+    got = pr.predict_from_neighbors(r, scores, idx)
+    w = nb.neighbor_weight_matrix(scores, idx, r.shape[0])
+    want = pr.predict_dense(r, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_predict_bounds_and_fallback(rng):
+    r = jnp.asarray((rng.integers(1, 6, (16, 12))
+                     * (rng.random((16, 12)) < 0.5)).astype(np.float32))
+    scores, idx = nb.topk_neighbors(r, 3, measure="pcc", block_size=8)
+    pred = np.asarray(pr.predict_from_neighbors(r, scores, idx))
+    assert np.all(pred >= 1.0) and np.all(pred <= 5.0)
+    assert np.all(np.isfinite(pred))
+
+
+def test_recommend_topn_excludes_seen(rng):
+    pred = jnp.asarray(rng.random((6, 20)).astype(np.float32)) * 4 + 1
+    seen = jnp.asarray(rng.random((6, 20)) < 0.4)
+    _, items = pr.recommend_topn(pred, seen, 5)
+    seen_np = np.asarray(seen)
+    for u in range(6):
+        assert not seen_np[u, np.asarray(items)[u]].any()

@@ -1,0 +1,96 @@
+"""Unit + property tests for the similarity measures (paper Eqs. 1–2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import similarity as sim
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def brute_force(ra, rb, measure):
+    """Straight-from-the-paper per-pair loops (the naive CPU thread body)."""
+    m, n = ra.shape[0], rb.shape[0]
+    out = np.zeros((m, n))
+    for i in range(m):
+        for j in range(n):
+            a, b = ra[i], rb[j]
+            both = (a > 0) & (b > 0)
+            if measure == "jaccard":
+                union = ((a > 0) | (b > 0)).sum()
+                out[i, j] = both.sum() / union if union else 0.0
+            elif measure == "cosine":
+                na, nb = np.linalg.norm(a), np.linalg.norm(b)
+                out[i, j] = a @ b / (na * nb) if na * nb > 0 else 0.0
+            else:
+                av, bv = a[both], b[both]
+                if both.sum() < 2:
+                    continue
+                sa, sb = av.std(), bv.std()
+                if sa * sb <= 1e-12:
+                    continue
+                out[i, j] = (np.corrcoef(av, bv)[0, 1] + 1) / 2
+    return out
+
+
+def _random_ratings(rng, m, d, density=0.4):
+    return (rng.integers(1, 6, (m, d))
+            * (rng.random((m, d)) < density)).astype(np.float32)
+
+
+@pytest.mark.parametrize("measure", sim.SIMILARITY_MEASURES)
+def test_matches_brute_force(measure, rng):
+    ra = _random_ratings(rng, 12, 30)
+    rb = _random_ratings(rng, 9, 30)
+    got = np.asarray(sim.pairwise_similarity(jnp.asarray(ra),
+                                             jnp.asarray(rb), measure))
+    want = brute_force(ra, rb, measure)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 16),
+       d=st.integers(4, 40))
+def test_range_and_symmetry(seed, m, d):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(_random_ratings(rng, m, d))
+    jac, cos, pcc = sim.all_measures(r, r)
+    for s in (jac, cos, pcc):
+        s = np.asarray(s)
+        assert np.all(s >= -1e-6) and np.all(s <= 1 + 1e-5)
+        np.testing.assert_allclose(s, s.T, atol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_self_similarity(seed):
+    rng = np.random.default_rng(seed)
+    r = _random_ratings(rng, 8, 24, density=0.8)
+    r[0] = np.maximum(r[0], 1)          # ensure ≥2 rated items
+    r[0, :3] = [1, 5, 3]                # and variance
+    r = jnp.asarray(r)
+    jac, cos, pcc = sim.all_measures(r, r)
+    np.testing.assert_allclose(np.diag(np.asarray(jac))[0], 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.diag(np.asarray(cos))[0], 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.diag(np.asarray(pcc))[0], 1.0, atol=1e-5)
+
+
+def test_pcc_degenerate_pairs(rng):
+    """<2 co-rated items or zero variance → similarity 0, not NaN."""
+    ra = np.zeros((2, 6), np.float32)
+    ra[0, 0] = 3.0                       # 1 co-rated item with rb[0]
+    ra[1, :4] = 4.0                      # constant ratings (zero variance)
+    rb = np.zeros((1, 6), np.float32)
+    rb[0, :4] = [3, 1, 4, 4]
+    out = np.asarray(sim.pairwise_similarity(jnp.asarray(ra),
+                                             jnp.asarray(rb), "pcc"))
+    assert np.all(np.isfinite(out))
+    assert out[0, 0] == 0.0 and out[1, 0] == 0.0
+
+
+def test_user_means_global_fallback():
+    r = jnp.asarray([[4.0, 0, 2.0], [0, 0, 0]])
+    means = np.asarray(sim.user_means(r))
+    assert means[0] == pytest.approx(3.0)
+    assert means[1] == pytest.approx(3.0)   # zero-rater → global mean

@@ -1,0 +1,180 @@
+"""Optimizers, checkpointing, fault tolerance, gradient compression."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.fault_tolerance import (FaultInjector,
+                                               StragglerWatchdog)
+from repro.training import compression as comp
+from repro.training.optimizer import adagrad, adamw, get_optimizer, sgd
+from repro.training.train_loop import TrainLoopConfig, make_train_step, run
+
+
+# -- optimizers ----------------------------------------------------------------
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw", "adagrad"])
+def test_optimizer_converges_quadratic(opt_name):
+    # adagrad's effective lr decays with accumulated curvature → larger base
+    opt = get_optimizer(opt_name, lr=1.0 if opt_name == "adagrad" else 0.1)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return opt.update(params, grads, state)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.15)
+
+
+def test_adamw_grad_clip():
+    opt = adamw(lr=1e-2, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(4, 1e6)}          # exploding gradient
+    params, state = opt.update(params, grads, state)
+    assert np.all(np.isfinite(np.asarray(params["w"])))
+    assert np.abs(np.asarray(params["w"])).max() < 1.0
+
+
+def test_optimizer_state_specs_mirror_params():
+    from jax.sharding import PartitionSpec as P
+    opt = adamw()
+    pspecs = {"a": P("data", None), "b": {"c": P(None)}}
+    sspecs = opt.state_specs(pspecs)
+    assert sspecs["m"] == pspecs and sspecs["v"] == pspecs
+
+
+# -- checkpointing ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones(5, jnp.bfloat16),
+                       "s": jnp.zeros((), jnp.int32)}}
+    ckpt.save(tmp_path, 7, tree)
+    assert ckpt.latest_step(tmp_path) == 7
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = ckpt.restore(tmp_path, 7, like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    d = ckpt.save(tmp_path, 1, tree)
+    ckpt.save(tmp_path, 2, tree)
+    (ckpt.Path(tmp_path) / "step_00000002" / "COMMITTED").unlink()
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    tree = {"w": jnp.ones(8)}
+    for s in (1, 2, 3):
+        saver.save(s, tree)
+    saver.wait()
+    assert ckpt.latest_step(tmp_path) == 3
+    steps = sorted(p.name for p in ckpt.Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2                    # gc keeps 2
+
+
+# -- fault tolerance + train loop -------------------------------------------------
+
+def _toy_problem():
+    target = jnp.asarray([0.5, -1.5])
+    opt = sgd(lr=0.2)
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - target) ** 2) + 0.0 * batch["x"].sum()
+
+    step = jax.jit(make_train_step(loss_fn, opt))
+    params = {"w": jnp.zeros(2)}
+    state = opt.init(params)
+    batches = lambda i: {"x": jnp.ones(2) * i}
+    return step, params, state, batches
+
+
+def test_train_loop_runs_and_converges(tmp_path):
+    step, params, state, batches = _toy_problem()
+    res = run(step, params, state, batches,
+              TrainLoopConfig(total_steps=50, checkpoint_every=10,
+                              checkpoint_dir=str(tmp_path)))
+    assert res.final_step == 50
+    assert res.losses[-1] < res.losses[0] * 0.01
+
+
+def test_train_loop_recovers_from_injected_fault(tmp_path):
+    step, params, state, batches = _toy_problem()
+    inj = FaultInjector(fail_at_steps=(17, 23))
+    res = run(step, params, state, batches,
+              TrainLoopConfig(total_steps=40, checkpoint_every=5,
+                              checkpoint_dir=str(tmp_path)),
+              injector=inj)
+    assert res.final_step == 40
+    assert len(inj.fired) == 2                # both faults triggered
+    assert res.losses[-1] < 1e-3              # still converged
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path):
+    step, params, state, batches = _toy_problem()
+    run(step, params, state, batches,
+        TrainLoopConfig(total_steps=20, checkpoint_every=5,
+                        checkpoint_dir=str(tmp_path)))
+    assert ckpt.latest_step(tmp_path) == 20
+    # a "restarted job" continues from step 20, not 0
+    seen = []
+    run(step, params, state, batches,
+        TrainLoopConfig(total_steps=30, checkpoint_every=5,
+                        checkpoint_dir=str(tmp_path)),
+        on_step=lambda s, l: seen.append(s))
+    assert seen[0] == 20 and seen[-1] == 29
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(grace_steps=3)
+    for i in range(10):
+        w.observe(i, 1.0)
+    assert w.observe(10, 5.0)                  # 5× slower → flagged
+    assert not w.needs_escalation
+    w.observe(11, 5.0)
+    w.observe(12, 6.0)
+    assert w.needs_escalation
+
+
+# -- gradient compression ----------------------------------------------------------
+
+def test_compression_error_feedback_converges():
+    target = jnp.asarray(np.linspace(-2, 2, 16).astype(np.float32))
+    opt = sgd(lr=0.05)
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros(16)}
+    state = {"opt": opt.init(params), "ef": comp.init_compression(params)}
+    step = jax.jit(make_train_step(loss_fn, opt, compression=True))
+    for i in range(200):
+        params, state, loss = step(params, state, {"x": jnp.zeros(1)})
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_compression_quantization_bounded():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(0, 1, 256).astype(np.float32))}
+    r = comp.init_compression(g)
+    deq, r2 = comp.compress_decompress(g, r)
+    err = np.abs(np.asarray(deq["w"]) - np.asarray(g["w"]))
+    assert err.max() <= np.abs(np.asarray(g["w"])).max() / 127 + 1e-6
+    # error feedback holds exactly the quantisation residual
+    np.testing.assert_allclose(np.asarray(r2["w"]),
+                               np.asarray(g["w"]) - np.asarray(deq["w"]),
+                               atol=1e-6)
