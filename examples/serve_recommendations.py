@@ -1,24 +1,26 @@
 """Batched recommendation serving: request queue → padded batch → predict.
 
-A minimal but real serving tier over the fitted CF model: requests arrive
-one by one, a batcher groups them up to ``--max-batch`` or ``--max-wait``,
-and the sharded predictor scores each user's full item row before top-n
-extraction — the pattern the recsys serve_p99 / serve_bulk shape cells
+A minimal but real serving tier over the unified CF engine facade: requests
+arrive one by one, a batcher groups them up to ``--max-batch`` or
+``--max-wait``, and the predictor scores each user's full item row before
+top-n extraction — the pattern the recsys serve_p99 / serve_bulk shape cells
 lower at production scale.
+
+Halfway through the request stream a batch of fresh ratings is absorbed
+with ``CFEngine.update_ratings`` — the incremental path refreshes only the
+affected neighbor rows (exactly; no approximation) and the very next batch
+serves from the updated cache.
 
     PYTHONPATH=src python examples/serve_recommendations.py
 """
 
 import argparse
-import queue
-import threading
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CFConfig, UserCF
+from repro.core import CFEngine
 from repro.data import load_ml1m_synthetic
 from repro.serving.engine import BatchingServer
 
@@ -28,21 +30,34 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--backend", default="sequential",
+                    choices=("sequential", "sharded", "ring", "pallas"))
     args = ap.parse_args()
 
     train, _, _ = load_ml1m_synthetic(n_users=1024, n_items=512)
-    tr = jnp.asarray(train)
-    cf = UserCF(CFConfig(measure="pcc", top_k=40, block_size=256))
-    cf.fit(tr)
-    print(f"model fitted in {cf.state.fit_seconds:.2f}s")
+    engine = CFEngine(jnp.asarray(train), measure="pcc", k=40,
+                      backend=args.backend, block_size=256).fit()
+    print(f"engine fitted ({args.backend}) in {engine.fit_seconds:.2f}s")
 
-    server = BatchingServer(cf, tr, max_batch=args.max_batch,
+    server = BatchingServer(engine, max_batch=args.max_batch,
                             max_wait_ms=args.max_wait_ms, topn=5)
     server.start()
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, engine.n_users, args.requests)
+
     t0 = time.perf_counter()
-    futures = [server.submit(int(u))
-               for u in np.random.default_rng(0).integers(
-                   0, 1024, args.requests)]
+    futures = [server.submit(int(u)) for u in users[:args.requests // 2]]
+
+    # live traffic: a burst of new ratings lands mid-stream
+    n_delta = 32
+    uids = rng.integers(0, engine.n_users, n_delta)
+    iids = rng.integers(0, engine.n_items, n_delta)
+    vals = rng.integers(1, 6, n_delta).astype(np.float32)
+    st = engine.update_ratings(uids, iids, vals)
+    print(f"absorbed {st.n_deltas} ratings in {st.seconds * 1e3:.0f}ms "
+          f"({st.n_affected} rows recomputed, {st.n_merged} merged)")
+
+    futures += [server.submit(int(u)) for u in users[args.requests // 2:]]
     results = [f.result(timeout=60) for f in futures]
     dt = time.perf_counter() - t0
     server.stop()

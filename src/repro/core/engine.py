@@ -1,7 +1,7 @@
 """The paper's multi-threaded engine, recast as mesh-sharded SPMD.
 
 The paper partitions query users across OS threads.  Here the partition is
-across mesh devices via ``jax.shard_map``; two engines are provided:
+across mesh devices via ``compat.shard_map``; two engines are provided:
 
 * ``sharded_topk``      — query users shard over an axis, every device holds
                           the full candidate rating matrix (the direct
@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import neighbors as nb
 from repro.core import predict as pred_mod
 from repro.core.similarity import user_means
@@ -61,7 +62,7 @@ def sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
         return _block_topk_local(q_block, all_ratings, k, measure,
                                  i * shard, 0, n_users, block_size)
 
-    f = jax.shard_map(per_shard, mesh=mesh,
+    f = compat.shard_map(per_shard, mesh=mesh,
                       in_specs=(P(axis, None), P(None, None)),
                       out_specs=(P(axis, None), P(axis, None)),
                       check_vma=False)
@@ -106,7 +107,7 @@ def ring_sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
             body, init, jnp.arange(axis_size))
         return best_s, best_i
 
-    f = jax.shard_map(per_shard, mesh=mesh,
+    f = compat.shard_map(per_shard, mesh=mesh,
                       in_specs=(P(axis, None),),
                       out_specs=(P(axis, None), P(axis, None)),
                       check_vma=False)
@@ -126,7 +127,7 @@ def sharded_predict(ratings: jnp.ndarray, scores: jnp.ndarray,
         return pred_mod.predict_from_neighbors(
             all_ratings, scores_blk, idx_blk, means=all_means, query_means=qm)
 
-    f = jax.shard_map(per_shard, mesh=mesh,
+    f = compat.shard_map(per_shard, mesh=mesh,
                       in_specs=(P(axis, None), P(axis, None),
                                 P(None, None), P(None)),
                       out_specs=P(axis, None), check_vma=False)
@@ -194,7 +195,7 @@ def ring_sharded_predict(ratings: jnp.ndarray, scores: jnp.ndarray,
         pred = jnp.where(den > 1e-8, pred, my_means[:, None])
         return jnp.clip(pred, 1.0, 5.0)
 
-    f = jax.shard_map(per_shard, mesh=mesh,
+    f = compat.shard_map(per_shard, mesh=mesh,
                       in_specs=(P(axis, None), P(axis, None), P(axis, None)),
                       out_specs=P(axis, None), check_vma=False)
     return f(ratings, scores, idx)
@@ -204,5 +205,4 @@ def ring_sharded_predict(ratings: jnp.ndarray, scores: jnp.ndarray,
 def cpu_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     """Utility mesh over however many (possibly fake) local devices exist."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (axis,))

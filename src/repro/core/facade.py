@@ -1,0 +1,424 @@
+"""Unified CF engine facade: one entry point over every exact engine.
+
+``CFEngine`` owns the rating matrix and the fitted neighbor state — cached
+``(U, k)`` scores/ids, per-user rating statistics, and means — and dispatches
+``fit`` to any of the four backends:
+
+* ``sequential`` — single-device ``topk_neighbors`` (the paper's baseline),
+* ``sharded``    — query users sharded over a mesh axis,
+* ``ring``       — systolic candidate rotation (O(U/P) memory per device),
+* ``pallas``     — the fused Gram-term TPU kernel (interpret mode on CPU).
+
+All four are exact: the three XLA engines are bit-identical by construction
+(the paper's "parallelisation does not change results" claim) and the fused
+kernel matches to float-rounding.
+
+Incremental maintenance
+-----------------------
+``update_ratings(user_ids, item_ids, values)`` absorbs a rating delta
+without recomputing every Gram term.  Let S be the set of touched users:
+
+1. the per-user sufficient statistics (rated count, rating sum → means) are
+   refolded for the rows of S only — the rank-1 correction to the Gram
+   aggregates, since no other row of the rating matrix moved;
+2. similarities of *all* users against S are recomputed as one (U, |S|)
+   Gram pass — the only pairwise terms that changed;
+3. rows whose cached top-k contains no member of S are exact after merging
+   the cached top-k with the fresh (row, S) scores: their other candidates'
+   similarities did not move, and the cached top-k already holds the k best
+   of them (``merge_topk``'s canonical tie-break keeps this order-invariant);
+4. rows in S, and rows whose cached top-k intersects S (a stale neighbor
+   whose score may have *dropped*), are recomputed against all candidates
+   via ``block_topk`` with explicit ``q_ids``.
+
+The result is bit-identical to a cold ``fit`` — pass ``oracle_check=True``
+to assert that on every update.  Work scales with |S| + |affected| rather
+than U², which is what makes neighborhood CF deployable under heavy update
+traffic (cf. incremental similarity maintenance in arXiv:2106.10679).
+
+Touched-row gathers are padded to power-of-two buckets so repeated updates
+reuse a handful of compiled executables instead of recompiling per delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import engine as dist_engine
+from repro.core import neighbors as nb
+from repro.core import predict as pred_mod
+from repro.core import similarity as sim
+from repro.kernels.similarity import fused_similarity
+
+BACKENDS = ("sequential", "sharded", "ring", "pallas")
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two ≥ n (≥ 8), capped — bounds distinct compile shapes."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@dataclasses.dataclass
+class UpdateStats:
+    """What one ``update_ratings`` call did (sizes drive the speedup)."""
+    n_deltas: int           # rating cells written
+    n_touched: int          # distinct users whose rows changed
+    n_affected: int         # rows fully recomputed (touched ∪ stale top-k)
+    n_merged: int           # rows fixed by the cheap cached-merge path
+    seconds: float
+    oracle_ok: Optional[bool] = None    # set when oracle_check=True
+
+
+@functools.partial(jax.jit, static_argnames=("measure",))
+def _cross_scores(ratings, cand_ids, *, measure):
+    """Similarity of every user against the (padded) touched set.
+
+    ``cand_ids``: (S,) global user ids, padded with out-of-range ids (≥ U).
+    Self-pairs and padding columns get NEG_INF so they can never win a
+    merge; the padding id must be *high* so it also loses every NEG_INF
+    tie against the cache's -1 padding under merge_topk's lower-id-wins
+    rule (a low sentinel would displace -1 slots and corrupt rows whose
+    cached top-k is partly padding, i.e. k > n valid candidates).
+    """
+    n_users = ratings.shape[0]
+    cand = ratings[jnp.clip(cand_ids, 0, n_users - 1)]
+    s = sim.pairwise_similarity(ratings, cand, measure=measure)
+    invalid = (cand_ids[None, :] < 0) | (cand_ids[None, :] >= n_users) | \
+              (cand_ids[None, :] == jnp.arange(n_users)[:, None])
+    s = jnp.where(invalid, nb.NEG_INF, s)
+    ids = jnp.broadcast_to(cand_ids[None, :], s.shape)
+    return s, ids
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _repair_rows(scores, idx, cross_s, cross_i, touch_ids, *, k):
+    """Drop stale entries, merge fresh (row, S) scores, and certify rows.
+
+    A repaired row is *certified exact* when every merged top-k entry scores
+    strictly above the row's old k-th score (``cut``), or ties it with a
+    neighbor id ≤ the old k-th entry's id ``L``.  The cache was the exact
+    *canonical* top-k, so every unseen candidate scores ≤ cut, and any
+    unseen candidate tied at the cut ranks canonically after the old k-th
+    entry — i.e. has id > L.  Certified entries therefore cannot be
+    displaced by anything outside the merge; the certificate also
+    re-establishes itself for the row's next update (the repaired row is
+    again an exact canonical top-k).  Rows failing the check get a full
+    recompute.
+
+    ``touch_ids``: (S,) touched user ids padded with ids ≥ U (never match
+    a cached id, including empty -1 slots, and lose every NEG_INF tie).
+    """
+    stale = (idx[..., None] == touch_ids[None, None, :]).any(-1)
+    cut = scores[:, k - 1]
+    last_id = idx[:, k - 1]
+    s_m = jnp.where(stale, nb.NEG_INF, scores)
+    i_m = jnp.where(stale, -1, idx)
+    ms, mi = nb.merge_topk(s_m, i_m, cross_s, cross_i, k)
+    ok = (ms > cut[:, None]) | \
+         ((ms == cut[:, None]) & (mi <= last_id[:, None]))
+    return ms, mi, ok.all(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "measure", "block_size"))
+def _rows_topk(ratings, q_ids, *, k, measure, block_size):
+    """Full recompute for a gathered (padded) set of query rows.
+
+    """
+    n_users = ratings.shape[0]
+    q = ratings[jnp.clip(q_ids, 0, n_users - 1)]
+    return nb.block_topk(q, ratings, k, measure=measure, q_ids=q_ids,
+                         block_size=min(block_size, n_users))
+
+
+_user_stats = jax.jit(sim.user_stats)
+
+
+@jax.jit
+def _refold_stats(ratings, cnt, tot, ids):
+    """Rank-1 refold: recompute count/total for the touched rows only.
+
+    ``ids`` padded with an out-of-range id (= U) so scatters drop them.
+    """
+    n_users = ratings.shape[0]
+    rows = ratings[jnp.clip(ids, 0, n_users - 1)]
+    mask = rows > 0
+    cnt = cnt.at[ids].set(jnp.sum(mask, axis=-1), mode="drop")
+    tot = tot.at[ids].set(jnp.sum(rows, axis=-1), mode="drop")
+    return cnt, tot, sim.means_from_stats(cnt, tot)
+
+
+@jax.jit
+def _scatter_rows(scores, idx, rows, new_s, new_i):
+    scores = scores.at[rows].set(new_s, mode="drop")
+    idx = idx.at[rows].set(new_i, mode="drop")
+    return scores, idx
+
+
+class CFEngine:
+    """Facade over the exact CF engines with incremental rating updates.
+
+    Parameters
+    ----------
+    ratings : (U, I) dense rating matrix, 0 = unrated.
+    backend : one of ``BACKENDS``; ``sharded``/``ring`` need ``mesh`` (or use
+        ``cpu_mesh()`` over all local devices when none is given).
+    interpret : force Pallas interpret mode; default auto (on unless TPU).
+    """
+
+    def __init__(self, ratings, *, measure: str = "pcc", k: int = 40,
+                 backend: str = "sequential", mesh: Optional[Mesh] = None,
+                 axis: str = "data", block_size: int = 1024,
+                 interpret: Optional[bool] = None):
+        if measure not in sim.SIMILARITY_MEASURES:
+            raise ValueError(f"unknown measure {measure!r}; want one of "
+                             f"{sim.SIMILARITY_MEASURES}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; want one of "
+                             f"{BACKENDS}")
+        self.ratings = jnp.asarray(ratings, jnp.float32)
+        self.measure = measure
+        self.k = int(k)
+        self.backend = backend
+        self.axis = axis
+        self.block_size = int(block_size)
+        if backend in ("sharded", "ring") and mesh is None:
+            mesh = dist_engine.cpu_mesh()
+        self.mesh = mesh
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+        self.scores: Optional[jnp.ndarray] = None    # (U, k)
+        self.idx: Optional[jnp.ndarray] = None       # (U, k)
+        self.means: Optional[jnp.ndarray] = None     # (U,)
+        self._cnt = None                             # (U,) rated-item counts
+        self._tot = None                             # (U,) rating sums
+        self._snapshot: Optional[tuple] = None       # atomically-published
+        self.fit_seconds = 0.0
+        self.last_update: Optional[UpdateStats] = None
+
+    # -- properties --------------------------------------------------------
+    @property
+    def n_users(self) -> int:
+        return self.ratings.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.ratings.shape[1]
+
+    @property
+    def fitted(self) -> bool:
+        return self.scores is not None
+
+    # -- fit ---------------------------------------------------------------
+    def fit(self) -> "CFEngine":
+        """Compute and cache top-k neighbors with the selected backend."""
+        t0 = time.perf_counter()
+        self.scores, self.idx = self._topk(self.ratings)
+        self.scores = jax.block_until_ready(self.scores)
+        self._cnt, self._tot, self.means = _user_stats(self.ratings)
+        self._snapshot = (self.ratings, self.scores, self.idx, self.means)
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def _topk(self, ratings) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        bs = min(self.block_size, ratings.shape[0])
+        if self.backend == "sequential":
+            return nb.topk_neighbors(ratings, self.k, measure=self.measure,
+                                     block_size=bs)
+        if self.backend == "sharded":
+            return dist_engine.sharded_topk(
+                ratings, self.k, self.mesh, measure=self.measure,
+                axis=self.axis, block_size=bs)
+        if self.backend == "ring":
+            return dist_engine.ring_sharded_topk(
+                ratings, self.k, self.mesh, measure=self.measure,
+                axis=self.axis, block_size=bs)
+        return self._pallas_topk(ratings)
+
+    def _pallas_topk(self, ratings) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Streaming top-k over candidate blocks scored by the fused kernel."""
+        n_users, n_items = ratings.shape
+        bs = min(self.block_size, n_users)
+        best_s = jnp.full((n_users, self.k), nb.NEG_INF, jnp.float32)
+        best_i = jnp.full((n_users, self.k), -1, jnp.int32)
+        q_ids = jnp.arange(n_users)
+        for b0 in range(0, n_users, bs):
+            block = ratings[b0:b0 + bs]
+            s = fused_similarity(
+                ratings, block, measure=self.measure,
+                bm=min(256, n_users), bn=min(256, block.shape[0]),
+                bk=min(512, n_items), interpret=self.interpret)
+            cand_ids = b0 + jnp.arange(block.shape[0])
+            s = jnp.where(cand_ids[None, :] == q_ids[:, None], nb.NEG_INF, s)
+            ids = jnp.broadcast_to(cand_ids[None, :], s.shape)
+            best_s, best_i = nb.merge_topk(best_s, best_i, s, ids, self.k)
+        return best_s, best_i
+
+    # -- incremental update ------------------------------------------------
+    def update_ratings(self, user_ids, item_ids, values, *,
+                       oracle_check: bool = False) -> UpdateStats:
+        """Absorb a rating delta; cached neighbors stay exact (see module doc).
+
+        ``values`` of 0 delete ratings.  Duplicate (user, item) cells in one
+        batch resolve last-wins.  Returns per-call :class:`UpdateStats`;
+        with ``oracle_check`` the refreshed cache is verified bit-for-bit
+        against a cold recompute (raises ``RuntimeError`` on any mismatch).
+
+        The ``pallas`` backend refits in full instead of repairing: its
+        cached scores carry the fused kernel's rounding, which the XLA
+        repair path cannot reproduce bit-for-bit (and the kernel makes the
+        refit cheap on TPU).
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() before update_ratings()")
+        t0 = time.perf_counter()
+        user_ids = np.atleast_1d(np.asarray(user_ids, np.int32))
+        item_ids = np.atleast_1d(np.asarray(item_ids, np.int32))
+        values = np.atleast_1d(np.asarray(values, np.float32))
+        if not (user_ids.shape == item_ids.shape == values.shape):
+            raise ValueError("user_ids, item_ids, values must align")
+        if user_ids.size == 0:
+            return UpdateStats(0, 0, 0, 0, 0.0)
+        if (user_ids < 0).any() or (user_ids >= self.n_users).any():
+            raise ValueError("user id out of range")
+        if (item_ids < 0).any() or (item_ids >= self.n_items).any():
+            raise ValueError("item id out of range")
+
+        # stream semantics: the last write to a (user, item) cell wins —
+        # JAX scatter order for duplicate indices is undefined, so dedupe
+        # on the host before applying
+        cell = user_ids.astype(np.int64) * self.n_items + item_ids
+        _, last_rev = np.unique(cell[::-1], return_index=True)
+        keep = np.sort(cell.size - 1 - last_rev)
+        user_ids, item_ids, values = (user_ids[keep], item_ids[keep],
+                                      values[keep])
+
+        self.ratings = self.ratings.at[jnp.asarray(user_ids),
+                                       jnp.asarray(item_ids)].set(
+                                           jnp.asarray(values))
+        touched = np.unique(user_ids)
+
+        # 1. refold the touched rows' sufficient statistics
+        s_pad = _bucket(len(touched), self.n_users)
+        pad_touch = np.full((s_pad,), self.n_users, np.int32)  # drop-scatter
+        pad_touch[:len(touched)] = touched
+        pad_touch_j = jnp.asarray(pad_touch)
+        self._cnt, self._tot, self.means = _refold_stats(
+            self.ratings, self._cnt, self._tot, pad_touch_j)
+
+        # the pallas backend's scores carry the fused kernel's rounding; the
+        # XLA-scored repair path would mix incomparable floats into the
+        # cache, so exactness there means a full refit — which is the cheap
+        # operation that backend exists to provide
+        if self.backend == "pallas":
+            self.scores, self.idx = self._topk(self.ratings)
+            self.scores = jax.block_until_ready(self.scores)
+            self._snapshot = (self.ratings, self.scores, self.idx,
+                              self.means)
+            stats = UpdateStats(
+                n_deltas=int(user_ids.size), n_touched=int(len(touched)),
+                n_affected=self.n_users, n_merged=0,
+                seconds=time.perf_counter() - t0)
+            if oracle_check:
+                stats.oracle_ok = self._check_oracle()
+            self.last_update = stats
+            return stats
+
+        # 2. one (U, |S|) Gram pass for the changed pairwise terms
+        cross_s, cross_i = _cross_scores(self.ratings, pad_touch_j,
+                                         measure=self.measure)
+
+        # 3. cheap path: drop stale entries, merge fresh (row, S) scores,
+        #    and certify which rows that provably repaired
+        merged_s, merged_i, safe = _repair_rows(
+            self.scores, self.idx, cross_s, cross_i, pad_touch_j, k=self.k)
+
+        # 4. exact-recompute path for touched and uncertified rows
+        need = ~np.asarray(safe)
+        need[touched] = True
+        affected = np.nonzero(need)[0].astype(np.int32)
+        n_merged = self.n_users - len(affected)
+        if len(affected):
+            a_pad = _bucket(len(affected), self.n_users)
+            rows = np.full((a_pad,), self.n_users, np.int32)
+            rows[:len(affected)] = affected
+            rows_j = jnp.asarray(rows)
+            new_s, new_i = _rows_topk(self.ratings, rows_j, k=self.k,
+                                      measure=self.measure,
+                                      block_size=self.block_size)
+            merged_s, merged_i = _scatter_rows(merged_s, merged_i, rows_j,
+                                               new_s, new_i)
+        self.scores = jax.block_until_ready(merged_s)
+        self.idx = merged_i
+        # single atomic publish: a concurrent reader (the serving batcher)
+        # sees either the whole old model or the whole new one, never a mix
+        self._snapshot = (self.ratings, self.scores, self.idx, self.means)
+
+        stats = UpdateStats(
+            n_deltas=int(user_ids.size), n_touched=int(len(touched)),
+            n_affected=int(len(affected)), n_merged=int(n_merged),
+            seconds=time.perf_counter() - t0)
+        if oracle_check:
+            stats.oracle_ok = self._check_oracle()
+        self.last_update = stats
+        return stats
+
+    def _check_oracle(self) -> bool:
+        """Assert cache == cold full recompute, bit for bit."""
+        ref_s, ref_i = self._topk(self.ratings)
+        _, _, ref_m = _user_stats(self.ratings)
+        errs = []
+        if not np.array_equal(np.asarray(ref_s), np.asarray(self.scores)):
+            errs.append("scores")
+        if not np.array_equal(np.asarray(ref_i), np.asarray(self.idx)):
+            errs.append("neighbor ids")
+        if not np.array_equal(np.asarray(ref_m), np.asarray(self.means)):
+            errs.append("means")
+        if errs:
+            raise RuntimeError(
+                f"incremental update diverged from full recompute: "
+                f"{', '.join(errs)}")
+        return True
+
+    # -- inference ---------------------------------------------------------
+    def snapshot(self) -> tuple:
+        """Consistent (ratings, scores, idx, means) view for concurrent readers."""
+        if self._snapshot is None:
+            raise RuntimeError("call fit() first")
+        return self._snapshot
+
+    def neighbors(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        return self.scores, self.idx
+
+    def predict(self, user_ids=None) -> jnp.ndarray:
+        """Predicted full item rows for ``user_ids`` (default: all users)."""
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        if user_ids is None:
+            return pred_mod.predict_from_neighbors(
+                self.ratings, self.scores, self.idx, means=self.means)
+        u = jnp.asarray(user_ids)
+        return pred_mod.predict_from_neighbors(
+            self.ratings, self.scores[u], self.idx[u], means=self.means,
+            query_means=self.means[u])
+
+    def recommend(self, user_ids=None, n: int = 10):
+        """Top-n unseen items (scores, item ids) for ``user_ids``."""
+        pred = self.predict(user_ids)
+        seen = (self.ratings if user_ids is None
+                else self.ratings[jnp.asarray(user_ids)]) > 0
+        return pred_mod.recommend_topn(pred, seen, n)

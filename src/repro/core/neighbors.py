@@ -42,6 +42,7 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
                measure: str = "pcc", q_offset: jnp.ndarray | int = 0,
                cand_offset: jnp.ndarray | int = 0,
                block_size: int = 1024,
+               q_ids: jnp.ndarray | None = None,
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k neighbors for a query block against all candidate users.
 
@@ -49,6 +50,11 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
     ``q_offset``); ``ratings``: (U, D) candidate ratings (global ids start at
     ``cand_offset``).  Self-pairs are masked.  Scans candidate blocks of
     ``block_size`` so peak memory is O(m·block_size), never O(m·U).
+
+    ``q_ids``: explicit (m,) global ids of the query rows for when they are
+    not contiguous (e.g. the facade's incremental path recomputes a gathered
+    subset of rows); overrides ``q_offset``.  Negative ids never match a
+    candidate, so padding rows can use them safely.
 
     Returns (scores, neighbor_ids), both (m, k), sorted descending.
     """
@@ -63,7 +69,8 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
     n_blocks = n_users_p // block_size
     blocks = ratings.reshape(n_blocks, block_size, ratings.shape[1])
 
-    q_ids = q_offset + jnp.arange(m)
+    if q_ids is None:
+        q_ids = q_offset + jnp.arange(m)
 
     def scan_body(carry, inp):
         best_s, best_i = carry

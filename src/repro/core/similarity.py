@@ -138,10 +138,21 @@ def all_measures(ra: jnp.ndarray, rb: jnp.ndarray
     return jaccard_from_gram(g), cosine_from_gram(g), pcc_from_gram(g)
 
 
-def user_means(ratings: jnp.ndarray) -> jnp.ndarray:
-    """Per-user mean over *rated* items only; 0-raters get the global mean."""
+def means_from_stats(cnt: jnp.ndarray, tot: jnp.ndarray) -> jnp.ndarray:
+    """Per-user means from rated counts/sums; 0-raters get the global mean."""
+    global_mean = jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1)
+    return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), global_mean)
+
+
+def user_stats(ratings: jnp.ndarray):
+    """(rated count, rating sum, means) per user — the incremental-update
+    sufficient statistics; ``user_means`` is its last component."""
     mask = ratings > 0
     cnt = jnp.sum(mask, axis=-1)
     tot = jnp.sum(ratings, axis=-1)
-    global_mean = jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1)
-    return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), global_mean)
+    return cnt, tot, means_from_stats(cnt, tot)
+
+
+def user_means(ratings: jnp.ndarray) -> jnp.ndarray:
+    """Per-user mean over *rated* items only; 0-raters get the global mean."""
+    return user_stats(ratings)[2]

@@ -31,9 +31,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                     # optional: fall back to uncompressed
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _FLAG = "COMMITTED"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is None:
+        return payload
+    return zstandard.ZstdCompressor(level=3).compress(payload)
+
+
+def _decompress(raw: bytes) -> bytes:
+    """Shards self-describe: zstd frames start with the zstd magic number."""
+    if not raw.startswith(_ZSTD_MAGIC):
+        return raw
+    if zstandard is None:
+        raise ImportError(
+            "checkpoint shard is zstd-compressed but the 'zstandard' package "
+            "is not installed (pip install zstandard)")
+    return zstandard.ZstdDecompressor().decompress(raw)
 
 
 def _flatten(tree):
@@ -60,14 +82,12 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree: Any) -> Path:
                 "leaves": [{"shape": list(np.shape(x)),
                             "dtype": str(jnp.asarray(x).dtype)}
                            for x in leaves]}
-    cctx = zstandard.ZstdCompressor(level=3)
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         payload = msgpack.packb({"i": i, "data": arr.tobytes(),
                                  "dtype": str(arr.dtype),
                                  "shape": list(arr.shape)})
-        (tmp / f"shard_{i:05d}.msgpack.zst").write_bytes(
-            cctx.compress(payload))
+        (tmp / f"shard_{i:05d}.msgpack.zst").write_bytes(_compress(payload))
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     (tmp / _FLAG).write_text("ok")
     if final.exists():
@@ -135,7 +155,6 @@ def restore(ckpt_dir: str | os.PathLike, step: int, like: Any,
     d = Path(ckpt_dir) / f"step_{step:08d}"
     if not (d / _FLAG).exists():
         raise FileNotFoundError(f"no committed checkpoint at {d}")
-    dctx = zstandard.ZstdDecompressor()
     leaves, treedef = _flatten(like)
     n = len(leaves)
     manifest = json.loads((d / "manifest.json").read_text())
@@ -144,7 +163,7 @@ def restore(ckpt_dir: str | os.PathLike, step: int, like: Any,
                          f"target tree has {n}")
     out = []
     for i in range(n):
-        raw = dctx.decompress((d / f"shard_{i:05d}.msgpack.zst").read_bytes())
+        raw = _decompress((d / f"shard_{i:05d}.msgpack.zst").read_bytes())
         rec = msgpack.unpackb(raw)
         arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
             rec["shape"])

@@ -5,25 +5,28 @@ state.  Single pod: (16, 16) = 256 chips, axes (data, model).  Multi-pod:
 (2, 16, 16) = 512 chips with the leading ``pod`` axis as outer data
 parallelism (the slow inter-pod DCI links only ever carry gradient
 all-reduces, never layer-wise TP traffic).
+
+All meshes go through ``repro.compat.make_mesh`` so the ``axis_types``
+kwarg drift between jax 0.4.x and ≥0.5 is handled in one place.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_flat_mesh(*, multi_pod: bool = False, axis: str = "data"):
     """Same devices as one ring — the CF engines' 1-axis partition view."""
     n = 512 if multi_pod else 256
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (axis,))
 
 
 def make_local_mesh(shape=None, axes=None):
@@ -31,5 +34,4 @@ def make_local_mesh(shape=None, axes=None):
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n,), ("data",)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 REPLICATE_THRESHOLD = 8192      # tables smaller than this are replicated
 
 
@@ -195,7 +197,11 @@ def sharded_lookup(layout: TableLayout, tables, indices: jnp.ndarray,
             assert layout.sharded_rows % n == 0, (layout.sharded_rows, n)
             rows_per_shard = layout.sharded_rows // n
             l_loc = (b // n) * len(sf)
-            capacity = max(int(l_loc / n * layout.bucket_slack), 8)
+            # slack-scaled buckets at production sizes; small per-device
+            # lookup counts get full capacity so the exchange stays exact
+            # (skew can put every lookup in one bucket)
+            capacity = max(int(l_loc / n * layout.bucket_slack),
+                           min(l_loc, 64))
 
             def body(tbl_loc, ids_loc):
                 flat = ids_loc.reshape(-1)
@@ -205,7 +211,7 @@ def sharded_lookup(layout: TableLayout, tables, indices: jnp.ndarray,
                     tbl_loc, owner, local_row, n, capacity, batch_axes)
                 return got.reshape(ids_loc.shape + (d,))
 
-            vals = jax.shard_map(
+            vals = compat.shard_map(
                 body, mesh=mesh,
                 in_specs=(P(batch_axes, None), P(batch_axes, None)),
                 out_specs=P(batch_axes, None, None),

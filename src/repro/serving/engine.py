@@ -5,11 +5,18 @@ Requests enqueue individually; a background batcher drains up to
 batch, runs the predictor once, and resolves per-request futures with
 top-n items.  This is the serve_p99 pattern: the fixed padded batch keeps
 one compiled executable hot regardless of arrival pattern.
+
+The server fronts a :class:`repro.core.facade.CFEngine` (preferred — the
+facade owns the rating matrix and neighbor cache, so ``update_ratings``
+between batches is picked up by the very next batch because the model
+arrays are passed per call, not baked into the executable) or the legacy
+``UserCF`` + ratings pair.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import threading
 import time
@@ -31,13 +38,30 @@ class Recommendation:
     latency_ms: float
 
 
+@functools.partial(jax.jit, static_argnames=("topn",))
+def _predict_users(users, ratings, scores, idx, means, *, topn):
+    pred = predict_from_neighbors(ratings, scores[users], idx[users],
+                                  means=means, query_means=means[users])
+    seen = ratings[users] > 0
+    return recommend_topn(pred, seen, topn)
+
+
 class BatchingServer:
-    def __init__(self, cf_model, ratings, *, max_batch: int = 16,
+    def __init__(self, cf_model, ratings=None, *, max_batch: int = 16,
                  max_wait_ms: float = 20.0, topn: int = 10):
-        if cf_model.state is None:
-            raise ValueError("fit the model first")
-        self.cf = cf_model
-        self.ratings = ratings
+        if ratings is None:
+            # CFEngine facade: snapshot() hands a consistent model view even
+            # while update_ratings runs on another thread
+            if getattr(cf_model, "scores", None) is None:
+                raise ValueError("fit the engine first")
+            self._snapshot = cf_model.snapshot
+        else:
+            # legacy UserCF + external ratings (static model)
+            if cf_model.state is None:
+                raise ValueError("fit the model first")
+            st = cf_model.state
+            snap = (ratings, st.scores, st.idx, st.means)
+            self._snapshot = lambda: snap
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.topn = topn
@@ -45,22 +69,13 @@ class BatchingServer:
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-
-        st = self.cf.state
-
-        @jax.jit
-        def _predict_users(users):
-            scores = st.scores[users]
-            idx = st.idx[users]
-            qmeans = st.means[users]
-            pred = predict_from_neighbors(self.ratings, scores, idx,
-                                          means=st.means, query_means=qmeans)
-            seen = self.ratings[users] > 0
-            return recommend_topn(pred, seen, self.topn)
-
-        self._predict = _predict_users
         # warm the executable with the padded batch shape
-        self._predict(jnp.zeros((self.max_batch,), jnp.int32))
+        self._run_padded(jnp.zeros((self.max_batch,), jnp.int32))
+
+    def _run_padded(self, users):
+        ratings, scores, idx, means = self._snapshot()
+        return _predict_users(users, ratings, scores, idx, means,
+                              topn=self.topn)
 
     # -- public API --------------------------------------------------------
     def submit(self, user: int) -> Future:
@@ -103,7 +118,7 @@ class BatchingServer:
         users = np.zeros((self.max_batch,), np.int32)
         for j, (u, _, _) in enumerate(batch):
             users[j] = u
-        scores, items = self._predict(jnp.asarray(users))
+        scores, items = self._run_padded(jnp.asarray(users))
         scores = np.asarray(scores)
         items = np.asarray(items)
         now = time.perf_counter()

@@ -1,0 +1,89 @@
+"""Hypothesis import shim for environments without the real package.
+
+The dev container / CI install ``hypothesis`` from requirements-dev.txt and
+get the real library.  When it is absent (hermetic containers), a minimal
+deterministic fallback provides the same surface the test-suite uses —
+``given``, ``settings`` (profile registry only), and the ``integers`` /
+``sampled_from`` / ``booleans`` strategies — drawing a fixed number of
+pseudo-random examples seeded per test, so property tests still execute
+instead of erroring at collection.  The fallback does no shrinking and no
+example database; it is a portability net, not a hypothesis replacement.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    strategies = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors hypothesis' class name
+        _profiles: dict = {}
+        _active = {"max_examples": 25}
+
+        def __init__(self, **kwargs):
+            self._kwargs = kwargs
+
+        def __call__(self, f):            # @settings(...) decorator form
+            f._hyp_settings = self._kwargs
+            return f
+
+        @classmethod
+        def register_profile(cls, name, **kwargs):
+            cls._profiles[name] = kwargs
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = {"max_examples": 25, **cls._profiles.get(name, {})}
+
+    def given(**strats):
+        def decorate(f):
+            sig = inspect.signature(f)
+            passthrough = [p for name, p in sig.parameters.items()
+                           if name not in strats]
+
+            @functools.wraps(f)
+            def runner(*args, **kwargs):
+                local = getattr(f, "_hyp_settings", {})
+                n = local.get("max_examples",
+                              settings._active.get("max_examples", 25))
+                rng = random.Random(
+                    zlib.crc32(f.__qualname__.encode("utf-8")))
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # pytest resolves fixtures from the signature: expose only the
+            # non-strategy parameters, exactly as real hypothesis does.
+            runner.__signature__ = sig.replace(parameters=passthrough)
+            return runner
+        return decorate

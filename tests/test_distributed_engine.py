@@ -62,8 +62,8 @@ def test_sharded_embedding_and_grads():
         import numpy as np, jax, jax.numpy as jnp
         from repro.models.embedding import (TableLayout, init_tables,
                                             sharded_lookup)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         layout = TableLayout(field_sizes=(100000, 50, 20000, 3),
                              embed_dim=16, n_shards=8, bucket_slack=4.0)
         tables = init_tables(layout, jax.random.PRNGKey(0))
@@ -91,8 +91,8 @@ def test_moe_sharded_matches_single_device():
         import numpy as np, jax, jax.numpy as jnp, dataclasses as dc
         from repro.models import transformer as tx
         from repro.models.common import NO_SHARDING, ShardingCtx
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = tx.TransformerConfig(
             name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
             head_dim=8, d_ff=64, vocab=128, remat=False,
@@ -122,8 +122,8 @@ def test_dlrm_sharded_train_step_runs():
         from repro.models import dlrm
         from repro.data import recsys_batch
         from repro.training.optimizer import get_optimizer
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_arch("dlrm_mlperf").smoke_config()
         params = dlrm.init_params(cfg, jax.random.PRNGKey(0))
         opt = get_optimizer("adagrad")

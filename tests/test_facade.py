@@ -1,0 +1,205 @@
+"""CFEngine facade: backend agreement + exact incremental maintenance."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import similarity as sim
+from repro.core.facade import BACKENDS, CFEngine
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+def _ratings(rng, u, d, density=0.4):
+    return jnp.asarray((rng.integers(1, 6, (u, d))
+                        * (rng.random((u, d)) < density)).astype(np.float32))
+
+
+def _delta(rng, u, d, n_users_touched, per_user=4):
+    us = rng.choice(u, n_users_touched, replace=False)
+    uids = np.repeat(us, per_user)
+    iids = rng.integers(0, d, uids.size).astype(np.int32)
+    vals = rng.integers(0, 6, uids.size).astype(np.float32)  # 0 = delete
+    return uids.astype(np.int32), iids, vals
+
+
+# -- backend agreement --------------------------------------------------------
+
+@given(seed=st.integers(0, 9999), k=st.integers(1, 12),
+       measure=st.sampled_from(sim.SIMILARITY_MEASURES))
+def test_all_backends_agree(seed, k, measure):
+    """All four backends produce the same top-k ids on random blocks."""
+    rng = np.random.default_rng(seed)
+    r = _ratings(rng, 64, 48)
+    results = {b: CFEngine(r, measure=measure, k=k, backend=b,
+                           block_size=16).fit().neighbors()
+               for b in BACKENDS}
+    s_ref, i_ref = results["sequential"]
+    for b in ("sharded", "ring"):
+        np.testing.assert_array_equal(
+            np.asarray(i_ref), np.asarray(results[b][1]), err_msg=b)
+        np.testing.assert_array_equal(
+            np.asarray(s_ref), np.asarray(results[b][0]), err_msg=b)
+    np.testing.assert_array_equal(
+        np.asarray(i_ref), np.asarray(results["pallas"][1]), err_msg="pallas")
+    np.testing.assert_allclose(
+        np.asarray(s_ref), np.asarray(results["pallas"][0]), atol=2e-5)
+
+
+def test_unknown_backend_and_measure_rejected():
+    r = _ratings(np.random.default_rng(0), 8, 8)
+    with pytest.raises(ValueError):
+        CFEngine(r, backend="threads")
+    with pytest.raises(ValueError):
+        CFEngine(r, measure="euclid")
+
+
+# -- incremental updates ------------------------------------------------------
+
+@given(seed=st.integers(0, 99999),
+       measure=st.sampled_from(sim.SIMILARITY_MEASURES))
+def test_update_matches_cold_recompute_bitwise(seed, measure):
+    """The headline exactness property: incremental == cold, bit for bit."""
+    rng = np.random.default_rng(seed)
+    u, d = 96, 64
+    r = _ratings(rng, u, d)
+    eng = CFEngine(r, measure=measure, k=8, block_size=32).fit()
+    uids, iids, vals = _delta(rng, u, d, n_users_touched=3)
+    stats = eng.update_ratings(uids, iids, vals, oracle_check=True)
+    assert stats.oracle_ok
+    assert stats.n_touched == len(np.unique(uids))
+    assert stats.n_affected + stats.n_merged == u
+    # the updated matrix itself took the writes (last-wins per cell)
+    want = np.asarray(r).copy()
+    for uu, ii, vv in zip(uids, iids, vals):
+        want[uu, ii] = vv
+    np.testing.assert_array_equal(np.asarray(eng.ratings), want)
+
+
+@given(seed=st.integers(0, 9999))
+def test_repeated_updates_stay_exact(seed):
+    """A stream of deltas must not accumulate drift (each folds exactly)."""
+    rng = np.random.default_rng(seed)
+    u, d = 64, 48
+    eng = CFEngine(_ratings(rng, u, d), measure="pcc", k=6,
+                   block_size=16).fit()
+    for _ in range(3):
+        uids, iids, vals = _delta(rng, u, d, n_users_touched=2, per_user=3)
+        assert eng.update_ratings(uids, iids, vals, oracle_check=True).oracle_ok
+
+
+def test_update_means_and_predictions_refresh():
+    """Means/predictions after an update equal those of a freshly-fit engine."""
+    rng = np.random.default_rng(7)
+    u, d = 64, 48
+    r = _ratings(rng, u, d)
+    eng = CFEngine(r, measure="cosine", k=6, block_size=16).fit()
+    uids, iids, vals = _delta(rng, u, d, n_users_touched=4)
+    eng.update_ratings(uids, iids, vals)
+    cold = CFEngine(eng.ratings, measure="cosine", k=6, block_size=16).fit()
+    np.testing.assert_array_equal(np.asarray(eng.means),
+                                  np.asarray(cold.means))
+    np.testing.assert_array_equal(np.asarray(eng.predict()),
+                                  np.asarray(cold.predict()))
+    s, items = eng.recommend(user_ids=np.arange(8), n=4)
+    seen = np.asarray(eng.ratings[:8] > 0)
+    for row in range(8):
+        assert not seen[row, np.asarray(items)[row]].any()
+
+
+def test_new_user_onboarding():
+    """A user with zero ratings gains some: their row becomes real neighbors."""
+    rng = np.random.default_rng(3)
+    r = np.asarray(_ratings(rng, 48, 32)).copy()
+    r[5] = 0.0                               # user 5 starts cold
+    eng = CFEngine(jnp.asarray(r), measure="pcc", k=5, block_size=16).fit()
+    iids = rng.choice(32, 10, replace=False).astype(np.int32)
+    vals = rng.integers(1, 6, 10).astype(np.float32)
+    stats = eng.update_ratings(np.full(10, 5, np.int32), iids, vals,
+                               oracle_check=True)
+    assert stats.oracle_ok
+    assert int(np.asarray(eng._cnt)[5]) == 10
+
+
+def test_update_validates_inputs():
+    eng = CFEngine(_ratings(np.random.default_rng(0), 16, 16), k=3,
+                   block_size=8).fit()
+    with pytest.raises(ValueError):
+        eng.update_ratings([99], [0], [5.0])          # user out of range
+    with pytest.raises(ValueError):
+        eng.update_ratings([0], [99], [5.0])          # item out of range
+    with pytest.raises(ValueError):
+        eng.update_ratings([0, 1], [0], [5.0])        # shape mismatch
+    stats = eng.update_ratings([], [], [])            # empty delta is a no-op
+    assert stats.n_deltas == 0
+
+
+def test_update_exact_when_k_exceeds_candidates():
+    """Cached rows padded with NEG_INF/-1 (k > U-1) must survive updates:
+    the cross-pass padding sentinel must lose NEG_INF ties to the cache's
+    -1 padding or it leaks into certified rows."""
+    rng = np.random.default_rng(0)
+    r = _ratings(rng, 12, 10, density=0.6)
+    eng = CFEngine(r, measure="pcc", k=20, block_size=8).fit()
+    st = eng.update_ratings([2], [3], [5.0], oracle_check=True)
+    assert st.oracle_ok
+    assert int(np.asarray(eng.idx).min()) >= -1
+
+
+def test_update_duplicate_cells_last_wins():
+    """Stream semantics: the last write to a (user, item) cell in one batch
+    wins, independent of JAX scatter ordering."""
+    rng = np.random.default_rng(1)
+    eng = CFEngine(_ratings(rng, 24, 16), measure="cosine", k=4,
+                   block_size=8).fit()
+    st = eng.update_ratings([1, 1, 1], [5, 5, 5], [2.0, 4.0, 3.0],
+                            oracle_check=True)
+    assert st.oracle_ok
+    assert float(np.asarray(eng.ratings)[1, 5]) == 3.0
+    assert st.n_deltas == 1                      # deduped cell count
+
+
+def test_snapshot_is_atomic_view():
+    """snapshot() hands one consistent tuple — what the serving batcher
+    reads while update_ratings publishes from another thread."""
+    rng = np.random.default_rng(2)
+    eng = CFEngine(_ratings(rng, 24, 16), k=4, block_size=8).fit()
+    before = eng.snapshot()
+    eng.update_ratings([0], [0], [5.0])
+    after = eng.snapshot()
+    assert before[0] is not after[0]             # old view untouched
+    assert after[0] is eng.ratings and after[1] is eng.scores
+
+
+def test_update_on_pallas_backend_refits_exactly():
+    """Pallas-scored caches can't be repaired with XLA scores (different
+    rounding); the update must fall back to a full refit and stay exact."""
+    rng = np.random.default_rng(4)
+    eng = CFEngine(_ratings(rng, 48, 32), measure="pcc", k=5,
+                   backend="pallas", block_size=16).fit()
+    uids, iids, vals = _delta(rng, 48, 32, n_users_touched=2)
+    st = eng.update_ratings(uids, iids, vals, oracle_check=True)
+    assert st.oracle_ok
+    assert st.n_affected == 48 and st.n_merged == 0
+
+
+def test_update_requires_fit():
+    eng = CFEngine(_ratings(np.random.default_rng(0), 16, 16))
+    with pytest.raises(RuntimeError):
+        eng.update_ratings([0], [0], [5.0])
+
+
+def test_update_cheaper_than_recompute_in_work_terms():
+    """The structural speedup claim: a small delta touches few rows."""
+    rng = np.random.default_rng(11)
+    u = 512
+    eng = CFEngine(_ratings(rng, u, 64), measure="pcc", k=10,
+                   block_size=64).fit()
+    uids, iids, vals = _delta(rng, u, 64, n_users_touched=5)  # ~1% of users
+    stats = eng.update_ratings(uids, iids, vals)
+    # affected = touched ∪ stale-top-k rows; with k=10 and 1% touched this
+    # must stay well under a third of a full recompute's row count
+    assert stats.n_affected < u // 3, stats
+    assert stats.n_merged > 2 * u // 3, stats

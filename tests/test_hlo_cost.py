@@ -72,16 +72,16 @@ def test_collectives_counted_inside_loops():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.launch.hlo_cost import analyze
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, shard_map
+        mesh = make_mesh((8,), ("d",))
         def f(x):
             def body(h, _):
                 h = jax.lax.psum(h, "d")
                 return h * 0.125, None
             h, _ = jax.lax.scan(body, x, None, length=10)
             return h
-        g = jax.shard_map(f, mesh=mesh, in_specs=P(None, None),
-                          out_specs=P(None, None), check_vma=False)
+        g = shard_map(f, mesh=mesh, in_specs=P(None, None),
+                      out_specs=P(None, None), check_vma=False)
         co = jax.jit(g).lower(
             jax.ShapeDtypeStruct((32, 64), jnp.float32)).compile()
         r = analyze(co.as_text())

@@ -1,0 +1,139 @@
+"""merge_topk tie-breaking and block_topk padding corners.
+
+These are the edge cases the ring engine's exactness claim rests on: the
+merge must be a canonical (order-invariant) reduction even under ties, and
+candidate-block padding must never leak phantom neighbors.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import neighbors as nb
+from repro.core import similarity as sim
+
+
+def _ratings(rng, u, d, density=0.5):
+    return jnp.asarray((rng.integers(1, 6, (u, d))
+                        * (rng.random((u, d)) < density)).astype(np.float32))
+
+
+def _oracle_topk(r, k, measure):
+    """Dense full-sort reference with the canonical (score desc, id asc) order."""
+    full = np.array(sim.pairwise_similarity(r, r, measure))
+    np.fill_diagonal(full, nb.NEG_INF)
+    u = full.shape[0]
+    scores = np.full((u, k), nb.NEG_INF, np.float32)
+    ids = np.full((u, k), -1, np.int32)
+    for row in range(u):
+        order = sorted(range(u), key=lambda j: (-full[row, j], j))
+        take = min(k, u)
+        for slot, j in enumerate(order[:take]):
+            if full[row, j] > nb.NEG_INF:
+                scores[row, slot] = full[row, j]
+                ids[row, slot] = j
+    return scores, ids
+
+
+# -- merge_topk ties ----------------------------------------------------------
+
+def test_merge_tie_breaks_by_lower_id():
+    s_a = jnp.asarray([[0.5, 0.5]])
+    i_a = jnp.asarray([[7, 9]], dtype=jnp.int32)
+    s_b = jnp.asarray([[0.5, 0.5]])
+    i_b = jnp.asarray([[3, 8]], dtype=jnp.int32)
+    s, i = nb.merge_topk(s_a, i_a, s_b, i_b, 3)
+    np.testing.assert_array_equal(np.asarray(i), [[3, 7, 8]])
+    np.testing.assert_array_equal(np.asarray(s), [[0.5, 0.5, 0.5]])
+
+
+def test_merge_all_ties_is_order_invariant_and_associative():
+    rng = np.random.default_rng(0)
+    m, k = 3, 4
+    chunks = []
+    base = 0
+    for size in (3, 5, 2):
+        s = jnp.asarray(rng.choice([0.25, 0.75], (m, size)))
+        i = jnp.asarray(base + np.tile(np.arange(size), (m, 1)),
+                        dtype=jnp.int32)
+        chunks.append((s, i))
+        base += 100
+    def fold(order):
+        s = jnp.full((m, k), nb.NEG_INF, jnp.float32)
+        i = jnp.full((m, k), -1, jnp.int32)
+        for j in order:
+            s, i = nb.merge_topk(s, i, chunks[j][0], chunks[j][1], k)
+        return np.asarray(s), np.asarray(i)
+    s0, i0 = fold([0, 1, 2])
+    for order in ([2, 1, 0], [1, 0, 2], [2, 0, 1]):
+        s1, i1 = fold(order)
+        np.testing.assert_array_equal(s0, s1, err_msg=str(order))
+        np.testing.assert_array_equal(i0, i1, err_msg=str(order))
+
+
+def test_merge_with_unequal_widths():
+    s_a = jnp.asarray([[0.9]])
+    i_a = jnp.asarray([[4]], dtype=jnp.int32)
+    s_b = jnp.asarray([[0.8, 0.7, 0.6]])
+    i_b = jnp.asarray([[1, 2, 3]], dtype=jnp.int32)
+    s, i = nb.merge_topk(s_a, i_a, s_b, i_b, 2)
+    np.testing.assert_array_equal(np.asarray(i), [[4, 1]])
+
+
+# -- block_topk padding corners ----------------------------------------------
+
+@pytest.mark.parametrize("u,block_size", [(50, 16), (37, 8), (64, 64),
+                                          (10, 16)])
+@pytest.mark.parametrize("measure", sim.SIMILARITY_MEASURES)
+def test_block_topk_non_divisible_blocks(u, block_size, measure):
+    """U % block_size ≠ 0 (and block_size > U) must match the dense oracle."""
+    rng = np.random.default_rng(u + block_size)
+    r = _ratings(rng, u, 24)
+    k = 5
+    scores, idx = nb.block_topk(r, r, k, measure=measure,
+                                block_size=block_size)
+    want_s, want_i = _oracle_topk(r, k, measure)
+    np.testing.assert_allclose(np.asarray(scores), want_s, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), want_i)
+
+
+def test_block_topk_k_exceeds_candidates():
+    """k > n_candidates: real neighbors first, then NEG_INF/-1 padding."""
+    rng = np.random.default_rng(5)
+    u, k = 12, 20
+    r = _ratings(rng, u, 16, density=0.9)
+    scores, idx = nb.block_topk(r, r, k, measure="cosine", block_size=8)
+    scores, idx = np.asarray(scores), np.asarray(idx)
+    for row in range(u):
+        valid = idx[row] >= 0
+        assert valid.sum() == u - 1                     # everyone but self
+        assert not valid[u - 1:].any()                  # padding is tail-only
+        assert (scores[row, ~valid] == nb.NEG_INF).all()
+        assert row not in idx[row]                      # self never appears
+        # no phantom neighbors from the internal block padding
+        assert idx[row].max() < u
+
+
+def test_block_topk_explicit_q_ids_match_offset():
+    """q_ids is the gathered-row form of q_offset; both must agree."""
+    rng = np.random.default_rng(9)
+    r = _ratings(rng, 40, 24)
+    k = 4
+    s_off, i_off = nb.block_topk(r[16:24], r, k, measure="pcc",
+                                 q_offset=16, block_size=16)
+    s_ids, i_ids = nb.block_topk(r[16:24], r, k, measure="pcc",
+                                 q_ids=jnp.arange(16, 24), block_size=16)
+    np.testing.assert_array_equal(np.asarray(s_off), np.asarray(s_ids))
+    np.testing.assert_array_equal(np.asarray(i_off), np.asarray(i_ids))
+
+
+def test_block_topk_negative_q_ids_never_self_mask():
+    """Padding rows (negative ids) keep all candidates — callers discard them."""
+    rng = np.random.default_rng(2)
+    r = _ratings(rng, 16, 12, density=0.9)
+    q_ids = jnp.asarray([-1, -1], dtype=jnp.int32)
+    scores, idx = nb.block_topk(r[:2], r, 16, q_ids=q_ids, measure="cosine",
+                                block_size=8)
+    idx = np.asarray(idx)
+    # with no self-masking every one of the 16 candidates is eligible
+    assert (np.sort(idx, axis=1) == np.arange(16)).all()
