@@ -2,9 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract, then
 the roofline table derived from the dry-run artifacts (if present).
+Machine-readable artifacts ``BENCH_topk.json`` and ``BENCH_index.json``
+are written alongside so the perf trajectory is tracked across PRs.
 
   paper Fig. 1/2  → time comparison (sequential vs sharded engines)
   paper Figs. 3–6 → MAE/Precision/Recall/F1 vs top-N × {jaccard,cosine,pcc}
+  index           → clustered two-stage search vs the exact engine
   methodology     → kernel microbenches + roofline terms
 """
 
@@ -20,11 +23,29 @@ def main() -> None:
     # -- paper Figs. 3-6: metric curves ------------------------------------
     try:
         from benchmarks import bench_topn_metrics
+        from benchmarks.bench_index import write_json
+        topk_rows = []
         for r in bench_topn_metrics.run(n_users=1024, n_items=768):
             name = f"topn_{r['measure']}_k{r['top_n']}"
             derived = (f"mae={r['mae']:.4f} p={r['precision']:.4f} "
                        f"r={r['recall']:.4f} f1={r['f1']:.4f}")
             print(f"{name},{r['seconds'] * 1e6:.0f},{derived}")
+            topk_rows.append(dict(r, name=name,
+                                  us_per_call=r["seconds"] * 1e6))
+        write_json("BENCH_topk.json", topk_rows)
+    except Exception:
+        traceback.print_exc()
+
+    # -- clustered index vs exact engine -----------------------------------
+    try:
+        from benchmarks import bench_index
+        rows = bench_index.run(sizes=(1024,), k=20, measure="cosine")
+        for r in rows:
+            derived = (f"speedup={r['fit_query_speedup']} "
+                       f"recall={r['recall_at_k']} "
+                       f"rerank={r['rerank_fraction']}")
+            print(f"{r['name']},{r['us_per_call']:.0f},{derived}")
+        bench_index.write_json("BENCH_index.json", rows)
     except Exception:
         traceback.print_exc()
 

@@ -1,7 +1,8 @@
 """Core of the paper: mesh-parallel memory-based collaborative filtering."""
 
 from repro.core.cf_model import CFConfig, CFState, UserCF
-from repro.core.facade import BACKENDS, CFEngine, UpdateStats
+from repro.core.facade import (BACKENDS, NEIGHBOR_MODES, CFEngine,
+                               UpdateStats)
 from repro.core.metrics import (mae, precision_recall_f1, rmse,
                                 topn_precision_recall)
 from repro.core.neighbors import merge_topk, topk_neighbors
@@ -12,7 +13,7 @@ from repro.core.similarity import (SIMILARITY_MEASURES, all_measures,
 from repro.core.slope_one import SlopeOne
 
 __all__ = [
-    "BACKENDS", "CFEngine", "UpdateStats",
+    "BACKENDS", "NEIGHBOR_MODES", "CFEngine", "UpdateStats",
     "CFConfig", "CFState", "UserCF", "SIMILARITY_MEASURES",
     "all_measures", "gram_terms", "pairwise_similarity", "user_means",
     "topk_neighbors", "merge_topk", "predict_from_neighbors",

@@ -13,6 +13,12 @@ All four are exact: the three XLA engines are bit-identical by construction
 (the paper's "parallelisation does not change results" claim) and the fused
 kernel matches to float-rounding.
 
+``neighbor_mode="approx"`` swaps the all-pairs fit for the clustered
+candidate-generation index (:mod:`repro.index`): sublinear two-stage
+search — probe the nearest user clusters, shortlist by projected proxy
+scores, exactly rerank the shortlist — with true similarity scores in the
+cache.  The exact backends remain the oracle (``recall_vs_exact``).
+
 Incremental maintenance
 -----------------------
 ``update_ratings(user_ids, item_ids, values)`` absorbs a rating delta
@@ -59,6 +65,7 @@ from repro.core import similarity as sim
 from repro.kernels.similarity import fused_similarity
 
 BACKENDS = ("sequential", "sharded", "ring", "pallas")
+NEIGHBOR_MODES = ("exact", "approx")
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -173,12 +180,23 @@ class CFEngine:
     ratings : (U, I) dense rating matrix, 0 = unrated.
     backend : one of ``BACKENDS``; ``sharded``/``ring`` need ``mesh`` (or use
         ``cpu_mesh()`` over all local devices when none is given).
+    neighbor_mode : ``"exact"`` (default) computes true all-pairs top-k with
+        the selected backend; ``"approx"`` fits a
+        :class:`repro.index.ClusteredIndex` and fills the neighbor cache
+        through its sublinear two-stage query — candidates from the probed
+        clusters, scores still the true similarity measure.  With
+        ``index_cfg`` at ``n_probe = n_clusters`` and ``rerank_frac = 0``
+        the approx cache is bit-identical to the exact one.
+    index_cfg : optional :class:`repro.index.IndexConfig`; default auto
+        (feature geometry follows ``measure``: mean-centered rows for pcc,
+        raw rows for cosine/jaccard).
     interpret : force Pallas interpret mode; default auto (on unless TPU).
     """
 
     def __init__(self, ratings, *, measure: str = "pcc", k: int = 40,
                  backend: str = "sequential", mesh: Optional[Mesh] = None,
                  axis: str = "data", block_size: int = 1024,
+                 neighbor_mode: str = "exact", index_cfg=None,
                  interpret: Optional[bool] = None):
         if measure not in sim.SIMILARITY_MEASURES:
             raise ValueError(f"unknown measure {measure!r}; want one of "
@@ -186,6 +204,9 @@ class CFEngine:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of "
                              f"{BACKENDS}")
+        if neighbor_mode not in NEIGHBOR_MODES:
+            raise ValueError(f"unknown neighbor_mode {neighbor_mode!r}; "
+                             f"want one of {NEIGHBOR_MODES}")
         self.ratings = jnp.asarray(ratings, jnp.float32)
         self.measure = measure
         self.k = int(k)
@@ -198,6 +219,15 @@ class CFEngine:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+
+        self.neighbor_mode = neighbor_mode
+        self.index = None
+        if neighbor_mode == "approx":
+            from repro.index import ClusteredIndex, IndexConfig
+            if index_cfg is None:
+                index_cfg = IndexConfig(
+                    features="centered" if measure == "pcc" else "raw")
+            self.index = ClusteredIndex(index_cfg)
 
         self.scores: Optional[jnp.ndarray] = None    # (U, k)
         self.idx: Optional[jnp.ndarray] = None       # (U, k)
@@ -223,11 +253,17 @@ class CFEngine:
 
     # -- fit ---------------------------------------------------------------
     def fit(self) -> "CFEngine":
-        """Compute and cache top-k neighbors with the selected backend."""
+        """Compute and cache top-k neighbors with the selected backend
+        (exact mode) or through the clustered index (approx mode)."""
         t0 = time.perf_counter()
-        self.scores, self.idx = self._topk(self.ratings)
-        self.scores = jax.block_until_ready(self.scores)
         self._cnt, self._tot, self.means = _user_stats(self.ratings)
+        if self.neighbor_mode == "approx":
+            self.index.fit(self.ratings, self.means)
+            self.scores, self.idx = self.index.query(
+                self.ratings, self.means, k=self.k, measure=self.measure)
+        else:
+            self.scores, self.idx = self._topk(self.ratings)
+        self.scores = jax.block_until_ready(self.scores)
         self._snapshot = (self.ratings, self.scores, self.idx, self.means)
         self.fit_seconds = time.perf_counter() - t0
         return self
@@ -276,6 +312,15 @@ class CFEngine:
         with ``oracle_check`` the refreshed cache is verified bit-for-bit
         against a cold recompute (raises ``RuntimeError`` on any mismatch).
 
+        In approx mode the clustered index is refolded first (touched
+        proxies, centroid mass, and spill assignments repaired exactly —
+        see ``repro.index``), then the same certificate machinery repairs
+        the neighbor cache: certified rows merge the fresh touched-pair
+        scores (true similarities), uncertified and touched rows re-query
+        the index.  ``oracle_check`` then asserts the index consistency
+        invariant instead of bitwise cache equality, which is an
+        exact-mode concept.
+
         The ``pallas`` backend refits in full instead of repairing: its
         cached scores carry the fused kernel's rounding, which the XLA
         repair path cannot reproduce bit-for-bit (and the kernel makes the
@@ -305,10 +350,10 @@ class CFEngine:
         user_ids, item_ids, values = (user_ids[keep], item_ids[keep],
                                       values[keep])
 
+        touched = np.unique(user_ids)
         self.ratings = self.ratings.at[jnp.asarray(user_ids),
                                        jnp.asarray(item_ids)].set(
                                            jnp.asarray(values))
-        touched = np.unique(user_ids)
 
         # 1. refold the touched rows' sufficient statistics
         s_pad = _bucket(len(touched), self.n_users)
@@ -317,12 +362,15 @@ class CFEngine:
         pad_touch_j = jnp.asarray(pad_touch)
         self._cnt, self._tot, self.means = _refold_stats(
             self.ratings, self._cnt, self._tot, pad_touch_j)
+        if self.neighbor_mode == "approx":
+            self.index.refold(self.ratings, self.means, touched)
 
         # the pallas backend's scores carry the fused kernel's rounding; the
         # XLA-scored repair path would mix incomparable floats into the
         # cache, so exactness there means a full refit — which is the cheap
-        # operation that backend exists to provide
-        if self.backend == "pallas":
+        # operation that backend exists to provide (approx mode never uses
+        # the backend's fit, so the repair path below applies instead)
+        if self.backend == "pallas" and self.neighbor_mode == "exact":
             self.scores, self.idx = self._topk(self.ratings)
             self.scores = jax.block_until_ready(self.scores)
             self._snapshot = (self.ratings, self.scores, self.idx,
@@ -345,7 +393,9 @@ class CFEngine:
         merged_s, merged_i, safe = _repair_rows(
             self.scores, self.idx, cross_s, cross_i, pad_touch_j, k=self.k)
 
-        # 4. exact-recompute path for touched and uncertified rows
+        # 4. recompute path for touched and uncertified rows: exact top-k
+        #    in exact mode, a fresh index query (same candidate policy as
+        #    fit) in approx mode
         need = ~np.asarray(safe)
         need[touched] = True
         affected = np.nonzero(need)[0].astype(np.int32)
@@ -355,9 +405,19 @@ class CFEngine:
             rows = np.full((a_pad,), self.n_users, np.int32)
             rows[:len(affected)] = affected
             rows_j = jnp.asarray(rows)
-            new_s, new_i = _rows_topk(self.ratings, rows_j, k=self.k,
-                                      measure=self.measure,
-                                      block_size=self.block_size)
+            if self.neighbor_mode == "approx":
+                q_s, q_i = self.index.query(self.ratings, self.means,
+                                            affected, k=self.k,
+                                            measure=self.measure)
+                new_s = np.full((a_pad, self.k), nb.NEG_INF, np.float32)
+                new_i = np.full((a_pad, self.k), -1, np.int32)
+                new_s[:len(affected)] = np.asarray(q_s)
+                new_i[:len(affected)] = np.asarray(q_i)
+                new_s, new_i = jnp.asarray(new_s), jnp.asarray(new_i)
+            else:
+                new_s, new_i = _rows_topk(self.ratings, rows_j, k=self.k,
+                                          measure=self.measure,
+                                          block_size=self.block_size)
             merged_s, merged_i = _scatter_rows(merged_s, merged_i, rows_j,
                                                new_s, new_i)
         self.scores = jax.block_until_ready(merged_s)
@@ -376,7 +436,17 @@ class CFEngine:
         return stats
 
     def _check_oracle(self) -> bool:
-        """Assert cache == cold full recompute, bit for bit."""
+        """Exact mode: assert cache == cold full recompute, bit for bit.
+        Approx mode: the cache is defined by the index's candidate policy,
+        so the oracle instead asserts the *index* invariant — assignments
+        and proxies equal a cold reassignment — plus exact means."""
+        if self.neighbor_mode == "approx":
+            ok = self.index.check_consistent(self.ratings, self.means)
+            _, _, ref_m = _user_stats(self.ratings)
+            if not np.array_equal(np.asarray(ref_m), np.asarray(self.means)):
+                raise RuntimeError("incremental means diverged from a "
+                                   "full recompute")
+            return ok
         ref_s, ref_i = self._topk(self.ratings)
         _, _, ref_m = _user_stats(self.ratings)
         errs = []
@@ -391,6 +461,39 @@ class CFEngine:
                 f"incremental update diverged from full recompute: "
                 f"{', '.join(errs)}")
         return True
+
+    # -- diagnostics -------------------------------------------------------
+    def recall_vs_exact(self, sample: int = 1024, seed: int = 0) -> float:
+        """Mean recall@k of the cached neighbors against the exact engine.
+
+        Samples ``sample`` users (seeded, without replacement), recomputes
+        their exact top-k rows, and returns the mean fraction of exact
+        neighbor ids present in the cache.  1.0 in exact mode by
+        construction; the approx-mode quality diagnostic.
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        rng = np.random.default_rng(seed)
+        n = min(sample, self.n_users)
+        users = np.sort(rng.choice(self.n_users, n, replace=False)
+                        ).astype(np.int32)
+        u_pad = _bucket(len(users), self.n_users)
+        rows = np.full((u_pad,), -1, np.int32)
+        rows[:len(users)] = users
+        ref_s, ref_i = _rows_topk(self.ratings, jnp.asarray(rows),
+                                  k=self.k, measure=self.measure,
+                                  block_size=self.block_size)
+        ref_i = np.asarray(ref_i)[:len(users)]
+        got_i = np.asarray(self.idx)[users]
+        hits = 0
+        total = 0
+        for row in range(len(users)):
+            exact = set(int(j) for j in ref_i[row] if j >= 0)
+            if not exact:
+                continue
+            hits += len(exact & set(int(j) for j in got_i[row]))
+            total += len(exact)
+        return hits / max(total, 1)
 
     # -- inference ---------------------------------------------------------
     def snapshot(self) -> tuple:

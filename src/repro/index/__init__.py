@@ -1,0 +1,15 @@
+"""Clustered candidate-generation: sublinear two-stage neighbor search.
+
+``ClusteredIndex`` partitions users with blocked k-means (``kmeans``), then
+answers neighbor queries by probing the nearest clusters and *exactly*
+reranking only their members — true similarity scores at sublinear
+candidate-generation cost.  ``CFEngine(neighbor_mode="approx")`` is the
+integrated entry point.
+"""
+
+from repro.index.clustered import (ClusteredIndex, IndexConfig, QueryStats,
+                                   RefoldStats)
+from repro.index.kmeans import KMeansStats, center_rows, kmeans
+
+__all__ = ["ClusteredIndex", "IndexConfig", "KMeansStats", "QueryStats",
+           "RefoldStats", "center_rows", "kmeans"]

@@ -1,0 +1,777 @@
+"""Clustered candidate-generation index: sublinear two-stage neighbor search.
+
+Exact all-pairs neighbor search costs O(U²·D) — fine for the paper's 6040
+MovieLens users, hopeless at the ROADMAP's millions.  :class:`ClusteredIndex`
+makes candidate generation cheap while keeping the scoring stage exact:
+
+1. **Project** — a seeded randomized-SVD basis maps each user's (optionally
+   mean-centered) unit rating row to a ``project_dim``-dim *proxy* vector.
+   The rating matrix is low-rank-plus-noise, so the proxy preserves the
+   neighbor geometry at a fraction of the item dimension.
+2. **Cluster** — blocked k-means (``repro.index.kmeans``) partitions the
+   proxies; each user is *spill-assigned* to its ``spill`` nearest clusters
+   so near-boundary neighbors are never lost to a hard partition.  This is
+   the paper's thread partition extended from "split users across threads"
+   to "split users across taste clusters".
+3. **Probe** — a query shortlists its ``n_probe`` nearest clusters by
+   centroid distance (the fused Pallas kernel on TPU).
+4. **Shortlist** — the probed-cluster members of each query block are
+   scored with one cheap proxy GEMM; the best ``rerank_frac · U`` per
+   query go forward.  (The shortlist pool is the block's probed union —
+   per-query probe restriction is exact in the unfiltered mode below.)
+5. **Rerank** — only the shortlist is scored with the *true* similarity
+   measure (the same Gram-term formulas the exact engines use), so returned
+   neighbors carry exact similarity scores.
+
+With ``n_probe == n_clusters`` and ``rerank_frac == 0`` (no shortlist cap)
+every probed member is reranked through the same shared-candidate
+``pairwise_similarity`` + canonical-sort path as the exact engines, and the
+result is bit-identical to their top-k — the degenerate case the oracle
+tests pin down.
+
+Consistency under rating updates
+--------------------------------
+``refold`` mirrors the facade's touched-set repair design: proxies and
+centroid mass are refolded for the touched rows only, and spill assignments
+are repaired *exactly* against the moved centroids via a certificate — a
+row provably keeps its cluster list when it owns no moved cluster and no
+moved centroid beats its cached spill distances (canonical tie: lower
+cluster id wins); every other row gets a full distance row.  After
+``refold`` the spill lists equal what a cold reassignment against the
+current centroids would produce (``check_consistent`` asserts it).
+Centroid *positions* refold the touched mass exactly; mass moved by repair
+reassignment is deliberately not cascaded (that would re-run k-means), so
+positions drift from a cold refit the way any online k-means does — an
+index-quality concern, never a correctness one, because reranking is exact
+for whatever candidates the probes produce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import neighbors as nb
+from repro.core import similarity as sim
+from repro.index.kmeans import (KMeansStats, center_rows, kmeans,
+                                normalize_rows)
+from repro.kernels.cluster import centroid_distances
+
+
+def _bucket(n: int, cap: int = 1 << 30) -> int:
+    """Next power of two ≥ n (≥ 8), capped — bounds distinct compile shapes."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Tuning knobs for :class:`ClusteredIndex`.
+
+    Auto values: ``n_clusters = 0`` → ``⌈√U⌉``; ``n_probe = 0`` → half the
+    clusters (the probe stage is the cheap stage — it bounds which rows the
+    proxy pass may scan; recall is then set by ``rerank_frac``).
+    ``project_dim`` is clamped to the item count; ``0`` disables the
+    projection (proxies = feature rows).  ``rerank_frac = 0`` disables the
+    proxy shortlist: every probed member is exactly reranked (the bit-exact
+    degenerate mode).
+    """
+    n_clusters: int = 0
+    n_probe: int = 0
+    seed: int = 0
+    iters: int = 8
+    features: str = "centered"            # "centered" (pcc geometry) |
+                                          # "raw" (cosine/jaccard geometry)
+    project_dim: int = 256
+    spill: int = 2
+    rerank_frac: float = 0.15
+    kmeans_block: int = 2048
+    query_block: int = 256
+    use_kernel: Optional[bool] = None     # None → auto: fused kernel on TPU
+    interpret: bool = False               # force kernel interpret mode
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Work accounting for one ``query`` call."""
+    n_queries: int
+    n_users: int           # candidate population the fractions refer to
+    n_probed: int          # probed-member rows summed over queries
+    n_reranked: int        # rows exactly reranked (true similarity)
+
+    def _frac(self, total: int) -> float:
+        pairs = self.n_queries * max(self.n_users - 1, 1)
+        return total / max(pairs, 1)
+
+    @property
+    def probed_fraction(self) -> float:
+        """Proxy-scanned candidates per query over all possible pairs."""
+        return self._frac(self.n_probed)
+
+    @property
+    def rerank_fraction(self) -> float:
+        """Exactly-reranked rows per query over all possible pairs."""
+        return self._frac(self.n_reranked)
+
+
+@dataclasses.dataclass
+class RefoldStats:
+    """What one ``refold`` call did (sizes drive the sublinear claim)."""
+    n_touched: int
+    n_changed_clusters: int
+    n_reassigned: int      # rows whose spill list actually changed
+    n_full_rows: int       # rows needing a full distance row
+    n_certified: int       # rows kept/merged by the cheap certificate
+
+
+@functools.partial(jax.jit, static_argnames=("features", "spherical"))
+def _featurize(ratings, means, *, features, spherical=True):
+    """The index's feature map: (centered|raw), unit rows."""
+    z = center_rows(ratings, means) if features == "centered" else ratings
+    return normalize_rows(z) if spherical else z
+
+
+@jax.jit
+def _project(z, basis):
+    """Unit proxy vectors: project then re-normalize (angles, not lengths)."""
+    return normalize_rows(z @ basis)
+
+
+def _svd_basis(z: np.ndarray, dim: int, seed: int) -> np.ndarray:
+    """Seeded randomized range-finder SVD basis, (D, dim), deterministic.
+
+    Two matmul passes + a small QR/SVD on the host — O(U·D·dim), a rounding
+    error next to one exact similarity pass.
+    """
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(z.shape[1], min(dim + 16, z.shape[1]))
+                   ).astype(np.float32)
+    q, _ = np.linalg.qr(z @ g)
+    _, _, vt = np.linalg.svd(q.T @ z, full_matrices=False)
+    return np.ascontiguousarray(vt[:dim].T)
+
+
+@functools.partial(jax.jit, static_argnames=("spill", "block_size",
+                                             "use_kernel", "interpret"))
+def _spill_assign(proxies, centroids, *, spill, block_size, use_kernel,
+                  interpret):
+    """Canonical top-``spill`` clusters (ids + distances) per proxy row."""
+    n = proxies.shape[0]
+    pad = (-n) % block_size
+    p = jnp.pad(proxies, ((0, pad), (0, 0)))
+    blocks = p.reshape(-1, block_size, p.shape[1])
+
+    def body(_, blk):
+        d = centroid_distances(blk, centroids, use_kernel=use_kernel,
+                               interpret=interpret)
+        neg_d, ids = jax.lax.top_k(-d, spill)   # ties → lowest cluster id
+        return (), (-neg_d, ids.astype(jnp.int32))
+
+    _, (dist, ids) = jax.lax.scan(body, (), blocks)
+    return ids.reshape(-1, spill)[:n], dist.reshape(-1, spill)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "use_kernel",
+                                             "interpret"))
+def _probe_clusters(proxies, centroids, q_ids, *, n_probe, use_kernel,
+                    interpret):
+    """Nearest ``n_probe`` cluster ids for each (padded) query row."""
+    zq = proxies[jnp.clip(q_ids, 0, proxies.shape[0] - 1)]
+    d = centroid_distances(zq, centroids, use_kernel=use_kernel,
+                           interpret=interpret)
+    _, probe = jax.lax.top_k(-d, n_probe)
+    return probe
+
+
+@jax.jit
+def _proxy_scores(proxies, q_ids, cand_ids):
+    """Proxy affinity of each (padded) query row against the shared
+    candidate set — one GEMM; self pairs and padding are knocked out."""
+    n_users = proxies.shape[0]
+    pq = proxies[jnp.clip(q_ids, 0, n_users - 1)]
+    pc = proxies[jnp.clip(cand_ids, 0, n_users - 1)]
+    sp = pq @ pc.T
+    invalid = (cand_ids[None, :] >= n_users) | \
+              (cand_ids[None, :] == q_ids[:, None])
+    return jnp.where(invalid, -jnp.inf, sp)
+
+
+@jax.jit
+def _proxy_scores_all(proxies, q_ids):
+    """Full-pool variant: no candidate gather (column j is user j), the
+    whole proxy table is the GEMM operand — what the pool shortcut runs."""
+    n_users = proxies.shape[0]
+    pq = proxies[jnp.clip(q_ids, 0, n_users - 1)]
+    sp = pq @ proxies.T
+    self_pair = jnp.arange(n_users, dtype=jnp.int32)[None, :] \
+        == q_ids[:, None]
+    return jnp.where(self_pair, -jnp.inf, sp)
+
+
+def _argpartition_rows(neg_sp: np.ndarray, m: int) -> np.ndarray:
+    """Row-wise top-m argpartition, split over two host threads (numpy's
+    partition releases the GIL, and the selection is per-row independent)."""
+    if neg_sp.shape[0] < 64:
+        return np.argpartition(neg_sp, m - 1, axis=1)[:, :m]
+    from concurrent.futures import ThreadPoolExecutor
+    half = neg_sp.shape[0] // 2
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        top = pool.submit(np.argpartition, neg_sp[:half], m - 1, 1)
+        bot = np.argpartition(neg_sp[half:], m - 1, axis=1)
+        return np.concatenate([top.result()[:, :m], bot[:, :m]], axis=0)
+
+
+@jax.jit
+def _user_norms_counts(ratings):
+    """Per-user full-row L2 norms and rated-item counts (one cheap pass)."""
+    return (jnp.sqrt(jnp.sum(ratings * ratings, axis=-1)),
+            jnp.sum(ratings > 0, axis=-1).astype(jnp.float32))
+
+
+@jax.jit
+def _int8_exact(ratings):
+    """True iff every rating is an integer in [0, 127] — i.e. an int8 copy
+    round-trips exactly (MovieLens-style 0..5 matrices qualify)."""
+    return jnp.all((ratings >= 0) & (ratings <= 127)
+                   & (ratings == jnp.round(ratings)))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "measure"))
+def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
+                   cand_ids, *, k, measure):
+    """Exact top-k over per-query candidate lists via the co-rated gather.
+
+    The paper's insight, batched: every similarity term between a query and
+    a candidate lives on the query's *rated* items, so instead of gathering
+    full (M, D) candidate rows we gather the (M, nnz) sub-block
+    ``ratings[cand, items_q]`` — O(M·nnz) traffic instead of O(M·D).
+    ``r_gather`` is the rating matrix as the gather source: int8 when every
+    rating is a small integer (MovieLens 1..5 — the gather is element-count
+    bound and int8 moves ~4× faster on CPU; the cast back to f32 is exact),
+    f32 otherwise.
+
+    ``q_items``/``q_vals``: (b, nnz) the query's rated item ids and values,
+    zero-padded (a zero value knocks the slot out of every term, since each
+    Gram term carries a query-side factor).  ``cand_ids``: (b, M) global
+    ids, padding = n_users.  Scores follow the exact formulas of
+    ``repro.core.similarity`` (reduction association differs by float
+    rounding only); selection is the canonical (-score, id) sort.
+    """
+    n_users = r_gather.shape[0]
+    safe_c = jnp.clip(cand_ids, 0, n_users - 1)
+    rc = r_gather[safe_c[:, :, None], q_items[:, None, :]
+                  ].astype(jnp.float32)                      # (b, M, nnz)
+    vq = q_vals                                              # (b, nnz)
+    vq_pos = (vq > 0).astype(jnp.float32)
+    mc = (rc > 0).astype(jnp.float32)
+    pe = functools.partial(jnp.einsum,
+                           precision=jax.lax.Precision.HIGHEST)
+    eps = 1e-8
+    if measure == "cosine":
+        dot = pe("bmn,bn->bm", rc, vq)
+        nq = jnp.sqrt(jnp.sum(vq * vq, -1))[:, None]
+        s = dot / jnp.maximum(nq * norms[safe_c], eps)
+    elif measure == "jaccard":
+        n = pe("bmn,bn->bm", mc, vq_pos)
+        union = jnp.sum(vq_pos, -1)[:, None] + counts[safe_c] - n
+        s = n / jnp.maximum(union, eps)
+    else:   # pcc over co-rated items, normalised to [0, 1]
+        n = pe("bmn,bn->bm", mc, vq_pos)
+        dot = pe("bmn,bn->bm", rc, vq)
+        sum_a = pe("bmn,bn->bm", mc, vq)
+        sum_b = pe("bmn,bn->bm", rc, vq_pos)
+        sq_a = pe("bmn,bn->bm", mc, vq * vq)
+        sq_b = pe("bmn,bn->bm", rc * rc, vq_pos)
+        cov = n * dot - sum_a * sum_b
+        var_a = n * sq_a - sum_a * sum_a
+        var_b = n * sq_b - sum_b * sum_b
+        denom = jnp.sqrt(jnp.maximum(var_a, 0.0)
+                         * jnp.maximum(var_b, 0.0))
+        valid = (n >= 2) & (denom > eps)
+        pcc = jnp.clip(cov / jnp.maximum(denom, eps), -1.0, 1.0)
+        s = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+
+    invalid = (cand_ids >= n_users) | (cand_ids == q_ids[:, None])
+    s = jnp.where(invalid, nb.NEG_INF, s)
+    ci = cand_ids
+    if s.shape[1] < k:
+        s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])),
+                    constant_values=nb.NEG_INF)
+        ci = jnp.pad(ci, ((0, 0), (0, k - ci.shape[1])),
+                     constant_values=n_users)
+    neg_sorted, idx_sorted = jax.lax.sort((-s, ci), num_keys=2)
+    top_s, top_i = -neg_sorted[:, :k], idx_sorted[:, :k]
+    return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "measure"))
+def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure):
+    """Exact top-k over a block-shared candidate set (the unfiltered path).
+
+    Scores come from the same ``pairwise_similarity`` Gram pass the exact
+    engines use; selection is the same canonical sort (descending score,
+    lower id on ties) as ``merge_topk`` — which is what makes the
+    ``n_probe == n_clusters`` case bit-identical to ``block_topk``.
+    Padding/self/unprobed pairs get NEG_INF; NEG_INF slots surface as id -1,
+    matching the exact engines' padding convention.
+    """
+    n_users = ratings.shape[0]
+    q = ratings[jnp.clip(q_ids, 0, n_users - 1)]
+    cand = ratings[jnp.clip(cand_ids, 0, n_users - 1)]
+    s = sim.pairwise_similarity(q, cand, measure=measure)
+    invalid = (~allowed) | (cand_ids[None, :] >= n_users) | \
+              (cand_ids[None, :] == q_ids[:, None])
+    s = jnp.where(invalid, nb.NEG_INF, s)
+    ids = jnp.broadcast_to(cand_ids[None, :], s.shape)
+    if s.shape[1] < k:
+        s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])),
+                    constant_values=nb.NEG_INF)
+        ids = jnp.pad(ids, ((0, 0), (0, k - ids.shape[1])),
+                      constant_values=n_users)
+    neg_sorted, idx_sorted = jax.lax.sort((-s, ids), num_keys=2)
+    top_s, top_i = -neg_sorted[:, :k], idx_sorted[:, :k]
+    return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
+
+
+class ClusteredIndex:
+    """User-clustering ANN index with exact rerank (see module docstring).
+
+    The index never owns the rating matrix — the caller (typically
+    :class:`repro.core.facade.CFEngine`) passes ``ratings``/``means`` into
+    every call, so one index serves whatever snapshot the caller holds.
+    """
+
+    def __init__(self, cfg: IndexConfig = IndexConfig()):
+        if cfg.features not in ("centered", "raw"):
+            raise ValueError(f"unknown features {cfg.features!r}; "
+                             "want 'centered' or 'raw'")
+        if cfg.spill < 1:
+            raise ValueError("spill must be ≥ 1")
+        self.cfg = cfg
+        self.n_users = 0
+        self.n_clusters = 0
+        self.n_probe = 0
+        self.basis: Optional[jnp.ndarray] = None       # (D, p) or None
+        self.proxies: Optional[jnp.ndarray] = None     # (U, p) unit rows
+        self.centroids: Optional[jnp.ndarray] = None   # (C, p)
+        self.spill_ids: Optional[np.ndarray] = None    # (U, spill) int32
+        self.spill_dist: Optional[np.ndarray] = None   # (U, spill) float32
+        self._sums: Optional[np.ndarray] = None        # (C, p) cluster mass
+        self._counts: Optional[np.ndarray] = None      # (C,)
+        self._members: List[np.ndarray] = []           # per-cluster user ids
+        self.kmeans_stats: Optional[KMeansStats] = None
+        self.last_query: Optional[QueryStats] = None
+        self.last_refold: Optional[RefoldStats] = None
+        self._gather_cache: Optional[tuple] = None
+
+    # -- resolution --------------------------------------------------------
+    @property
+    def fitted(self) -> bool:
+        return self.centroids is not None
+
+    @property
+    def assign(self) -> np.ndarray:
+        """Primary (nearest-centroid) cluster per user."""
+        return self.spill_ids[:, 0]
+
+    def _use_kernel(self) -> bool:
+        if self.cfg.use_kernel is None:
+            return jax.default_backend() == "tpu"
+        return bool(self.cfg.use_kernel)
+
+    def _distances(self, x, c):
+        return centroid_distances(x, c, use_kernel=self._use_kernel(),
+                                  interpret=self.cfg.interpret)
+
+    def _featurize(self, ratings, means):
+        return _featurize(ratings, means, features=self.cfg.features)
+
+    def _proxy_rows(self, ratings, means):
+        z = self._featurize(ratings, means)
+        return _project(z, self.basis) if self.basis is not None else z
+
+    def _max_rerank(self, k: int) -> int:
+        if not self.cfg.rerank_frac:
+            return 0
+        return max(k, int(np.ceil(self.cfg.rerank_frac * self.n_users)))
+
+    def _gather_source(self, ratings):
+        """Rating matrix as the sparse-rerank gather operand, cached per
+        ratings array: int8 when an int8 copy round-trips exactly
+        (MovieLens 1..5 — the gather is element-count bound and int8 moves
+        ~4× faster on CPU), the f32 matrix otherwise."""
+        if self._gather_cache is not None and \
+                self._gather_cache[0] is ratings:
+            return self._gather_cache[1]
+        src = (ratings.astype(jnp.int8) if bool(_int8_exact(ratings))
+               else ratings)
+        self._gather_cache = (ratings, src)
+        return src
+
+    # -- fit ---------------------------------------------------------------
+    def fit(self, ratings: jnp.ndarray,
+            means: Optional[jnp.ndarray] = None) -> "ClusteredIndex":
+        """Project, cluster, and spill-assign the users of ``ratings``."""
+        ratings = jnp.asarray(ratings, jnp.float32)
+        self.n_users, n_items = ratings.shape
+        if means is None:
+            means = sim.user_stats(ratings)[2]
+        c = self.cfg.n_clusters or int(np.ceil(np.sqrt(self.n_users)))
+        self.n_clusters = max(1, min(c, self.n_users))
+        self.n_probe = self.cfg.n_probe or max(1, self.n_clusters // 2)
+        self.n_probe = min(self.n_probe, self.n_clusters)
+        spill = min(self.cfg.spill, self.n_clusters)
+
+        z = self._featurize(ratings, means)
+        p = min(self.cfg.project_dim, n_items)
+        if self.cfg.project_dim and p < n_items:
+            self.basis = jnp.asarray(
+                _svd_basis(np.asarray(z), p, self.cfg.seed))
+        else:
+            self.basis = None
+        self.proxies = (_project(z, self.basis)
+                        if self.basis is not None else z)
+
+        self.centroids, _, _, self.kmeans_stats = kmeans(
+            self.proxies, self.n_clusters, seed=self.cfg.seed,
+            iters=self.cfg.iters, block_size=self.cfg.kmeans_block,
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        ids, dist = _spill_assign(
+            self.proxies, self.centroids, spill=spill,
+            block_size=min(self.cfg.kmeans_block, self.n_users),
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        self.spill_ids = np.array(ids)
+        self.spill_dist = np.array(dist)
+        self._fold_mass()
+        self._rebuild_members()
+        return self
+
+    def _fold_mass(self) -> None:
+        p_np = np.asarray(self.proxies)
+        self._sums = np.zeros((self.n_clusters, p_np.shape[1]), np.float32)
+        np.add.at(self._sums, self.assign, p_np)
+        self._counts = np.bincount(self.assign,
+                                   minlength=self.n_clusters).astype(np.int64)
+
+    def _rebuild_members(self) -> None:
+        """Per-cluster member lists from the spill assignment (ascending)."""
+        flat = self.spill_ids.reshape(-1)
+        users = np.repeat(np.arange(self.n_users, dtype=np.int32),
+                          self.spill_ids.shape[1])
+        order = np.lexsort((users, flat))
+        flat, users = flat[order], users[order]
+        splits = np.searchsorted(flat, np.arange(1, self.n_clusters))
+        self._members = list(np.split(users, splits))
+
+    # -- query -------------------------------------------------------------
+    def query(self, ratings: jnp.ndarray, means: jnp.ndarray,
+              user_ids=None, *, k: int, measure: str = "pcc",
+              n_probe: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Top-k true-similarity neighbors through the two-stage pipeline.
+
+        Returns ``(scores, neighbor_ids)`` of shape ``(len(user_ids), k)``;
+        sets ``self.last_query`` with work accounting.  With ``n_probe ==
+        n_clusters`` and ``rerank_frac == 0`` the result is bit-identical
+        to the exact engines.
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        uids = (np.arange(self.n_users, dtype=np.int32) if user_ids is None
+                else np.atleast_1d(np.asarray(user_ids, np.int32)))
+        n_probe = min(n_probe or self.n_probe, self.n_clusters)
+        max_rerank = self._max_rerank(k)
+        bq = min(self.cfg.query_block, _bucket(len(uids)))
+        out_s = np.empty((len(uids), k), np.float32)
+        out_i = np.empty((len(uids), k), np.int32)
+        n_probed = 0
+        n_reranked = 0
+
+        # pass 1 — probe clusters and build per-query shortlists; blocks
+        # whose candidate union already fits the rerank budget go straight
+        # through the shared-matmul exact path (also the bit-exact
+        # degenerate mode).  When every user is spill-assigned fewer ways
+        # than the query probes (n_probe·spill ≥ C), the block union
+        # provably saturates to ~all users — the pool shortcut skips the
+        # per-block probe/set algebra and scans the full proxy table.
+        pool_all = (bool(max_rerank) and max_rerank < self.n_users
+                    and n_probe * self.spill_ids.shape[1] >= self.n_clusters)
+        if pool_all:
+            cand_all = np.arange(self.n_users, dtype=np.int32)
+            # no per-block probe work here, so score in tall blocks — the
+            # (bq, p)·(p, U) GEMM runs ~2.5× faster at bq=2048 than 256
+            bq = min(2048, _bucket(len(uids)))
+        pend_pos: list = []        # output row ranges awaiting pass 2
+        pend_short: list = []      # their (nv, max_rerank) shortlists
+        for lo in range(0, len(uids), bq):
+            ids = uids[lo:lo + bq]
+            nv = len(ids)
+            ids_pad = np.full((bq,), self.n_users, np.int32)
+            ids_pad[:nv] = ids
+            ids_j = jnp.asarray(ids_pad)
+            if pool_all:
+                cand, cand_pad = cand_all, cand_all
+            else:
+                probe = np.asarray(_probe_clusters(
+                    self.proxies, self.centroids, ids_j, n_probe=n_probe,
+                    use_kernel=self._use_kernel(),
+                    interpret=self.cfg.interpret))
+                clusters = np.unique(probe[:nv])
+                cand = np.unique(np.concatenate(
+                    [self._members[c] for c in clusters]))
+                L = _bucket(len(cand))
+                cand_pad = np.full((L,), self.n_users, np.int32)
+                cand_pad[:len(cand)] = cand
+            if max_rerank and max_rerank < len(cand):
+                # filtered path: shortlist by proxy affinity against the
+                # block's probed-cluster union — one GEMM (gather-free
+                # under the pool shortcut) + threaded host selection
+                n_probed += nv * len(cand)
+                if pool_all:
+                    sp = np.asarray(_proxy_scores_all(self.proxies,
+                                                      ids_j))[:nv]
+                else:
+                    sp = np.asarray(_proxy_scores(
+                        self.proxies, ids_j, jnp.asarray(cand_pad)))[:nv]
+                sel = _argpartition_rows(-sp, max_rerank)
+                short_np = np.where(
+                    np.take_along_axis(sp, sel, 1) == -np.inf,
+                    self.n_users, cand_pad[sel]).astype(np.int32)
+                n_reranked += int((short_np < self.n_users).sum())
+                pend_pos.append(np.arange(lo, lo + nv))
+                pend_short.append(short_np)
+            else:
+                # unfiltered path: exact per-query probe semantics — a
+                # candidate counts iff one of its spill clusters was probed
+                # by that query (the bit-exact degenerate mode lives here)
+                allowed = np.zeros((bq, L), bool)
+                probed_tbl = np.zeros((nv, self.n_clusters), bool)
+                probed_tbl[np.arange(nv)[:, None], probe[:nv]] = True
+                sp_c = self.spill_ids[cand]                  # (Lc, spill)
+                allowed[:nv, :len(cand)] = probed_tbl[:, sp_c].any(-1)
+                n_pairs = int((allowed[:nv]
+                               & (cand_pad[None, :] != ids[:, None])).sum())
+                n_probed += n_pairs
+                n_reranked += n_pairs
+                s, i = _rerank_shared(ratings, ids_j, jnp.asarray(cand_pad),
+                                      jnp.asarray(allowed), k=k,
+                                      measure=measure)
+                out_s[lo:lo + bq] = np.asarray(s)[:nv]
+                out_i[lo:lo + bq] = np.asarray(i)[:nv]
+
+        # pass 2 — exact sparse rerank of the shortlists, queries ordered
+        # by rated-item count so each block's (b, M, nnz) gather is tightly
+        # bucketed and bounded in memory
+        if pend_pos:
+            pos = np.concatenate(pend_pos)
+            # ascending shortlists give the gather a monotone row walk
+            shorts = np.sort(np.concatenate(pend_short, axis=0), axis=1)
+            q_all = uids[pos]
+            # only the pending queries' rows come to the host — an
+            # update-path repair of a few rows must not copy the matrix
+            q_rows = np.asarray(ratings[jnp.asarray(q_all)])
+            nnz = np.count_nonzero(q_rows, axis=1)
+            order = np.argsort(nnz, kind="stable")
+            norms, counts = _user_norms_counts(ratings)
+            r_gather = self._gather_source(ratings)
+            budget = 256 << 20                      # gather bytes per block
+            lo2 = 0
+            while lo2 < len(order):
+                tail = order[lo2:lo2 + self.cfg.query_block]
+                nnz_b = _bucket(max(int(nnz[tail].max()), 1))
+                b = int(max(8, 1 << int(np.log2(
+                    max(budget // (max_rerank * nnz_b * 4), 8)))))
+                b = min(b, self.cfg.query_block, _bucket(len(order)))
+                sel = order[lo2:lo2 + b]
+                nnz_b = min(_bucket(max(int(nnz[sel].max()), 1)),
+                            q_rows.shape[1])
+                # always pad rows to the bucket's block size so each nnz
+                # bucket compiles exactly one executable (tails included)
+                bp = b
+                # vectorized rated-item extraction: stable argsort floats
+                # the nonzero cells left, keeping item ids ascending
+                rows = q_rows[sel]
+                idx = np.argsort(rows == 0, axis=1,
+                                 kind="stable")[:, :nnz_b]
+                items = np.zeros((bp, nnz_b), np.int32)
+                vals = np.zeros((bp, nnz_b), np.float32)
+                items[:len(sel)] = idx
+                vals[:len(sel)] = np.take_along_axis(rows, idx, axis=1)
+                qi_pad = np.full((bp,), self.n_users, np.int32)
+                qi_pad[:len(sel)] = q_all[sel]
+                sh_pad = np.full((bp, max_rerank), self.n_users, np.int32)
+                sh_pad[:len(sel)] = shorts[sel]
+                s, i = _rerank_sparse(
+                    r_gather, norms, counts, jnp.asarray(qi_pad),
+                    jnp.asarray(items), jnp.asarray(vals),
+                    jnp.asarray(sh_pad), k=k, measure=measure)
+                out_s[pos[sel]] = np.asarray(s)[:len(sel)]
+                out_i[pos[sel]] = np.asarray(i)[:len(sel)]
+                lo2 += b
+
+        self.last_query = QueryStats(n_queries=len(uids),
+                                     n_users=self.n_users,
+                                     n_probed=n_probed,
+                                     n_reranked=n_reranked)
+        return jnp.asarray(out_s), jnp.asarray(out_i)
+
+    # -- incremental maintenance ------------------------------------------
+    def refold(self, ratings: jnp.ndarray, means: jnp.ndarray,
+               touched: np.ndarray) -> RefoldStats:
+        """Fold a rating delta into the index (see module docstring).
+
+        ``touched``: sorted unique user ids whose rows changed;
+        ``ratings``/``means`` are the post-update arrays.  The mass ledger
+        invariant — every row's proxy mass sits at its *current primary
+        cluster* — is what keeps repeated refolds exact: removal always
+        subtracts the very value that was added (the stored proxy row),
+        never a recomputation of it.
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        touched = np.atleast_1d(np.asarray(touched, np.int32))
+        if touched.size == 0:
+            self.last_refold = RefoldStats(0, 0, 0, 0, self.n_users)
+            return self.last_refold
+        spill = self.spill_ids.shape[1]
+
+        # 1. refold proxies and centroid mass for the touched rows: remove
+        #    the *stored* proxy at the ledger location (current primary),
+        #    add the fresh proxy at the nearest current centroid; the
+        #    repair below establishes the final canonical spill lists and
+        #    step 4 re-homes any mass whose primary moved
+        p_old = np.asarray(self.proxies[jnp.asarray(touched)])
+        p_new_j = self._proxy_rows(ratings[jnp.asarray(touched)],
+                                   means[jnp.asarray(touched)])
+        p_new = np.asarray(p_new_j)
+        self.proxies = self.proxies.at[jnp.asarray(touched)].set(p_new_j)
+        a_old = self.assign[touched].copy()
+        np.add.at(self._sums, a_old, -p_old)
+        np.add.at(self._counts, a_old, -1)
+        d_new = np.asarray(self._distances(p_new_j, self.centroids))
+        a_prov = d_new.argmin(axis=1).astype(np.int32)
+        np.add.at(self._sums, a_prov, p_new)
+        np.add.at(self._counts, a_prov, 1)
+
+        # 2. recompute the moved centroids (empty → keep position: nothing
+        #    is assigned there, so it merely stops attracting probes)
+        changed = np.unique(np.concatenate([a_old, a_prov]))
+        cent = np.array(self.centroids)
+        upd = changed[self._counts[changed] > 0]
+        cent[upd] = self._sums[upd] / self._counts[upd, None]
+        self.centroids = jnp.asarray(cent)
+
+        # 3. exact spill repair against the moved centroids.  full rows:
+        #    touched rows (their proxy moved) and rows owning a moved
+        #    cluster (their cached spill distances are stale)
+        old_ids = self.spill_ids.copy()
+        need_full = np.isin(self.spill_ids, changed).any(axis=1)
+        need_full[touched] = True
+
+        # cheap certificate for the rest: merge the moved centroids'
+        # fresh distances into the still-valid cached spill list; clusters
+        # outside (spill ∪ changed) kept their distances and already lost
+        # to the cached spill-th entry, so the merge is exact
+        cb = _bucket(len(changed))
+        cent_ch = cent[np.pad(changed, (0, cb - len(changed)),
+                              constant_values=changed[0])]
+        d_ch = np.asarray(self._distances(self.proxies,
+                                          jnp.asarray(cent_ch))
+                          )[:, :len(changed)]
+        merge_d = np.concatenate([self.spill_dist, d_ch], axis=1)
+        merge_i = np.concatenate(
+            [self.spill_ids,
+             np.broadcast_to(changed[None, :],
+                             (self.n_users, len(changed)))], axis=1)
+        order = np.lexsort((merge_i, merge_d), axis=1)[:, :spill]
+        keep = ~need_full
+        rows = np.nonzero(keep)[0]
+        self.spill_ids[rows] = np.take_along_axis(
+            merge_i, order, axis=1)[rows]
+        self.spill_dist[rows] = np.take_along_axis(
+            merge_d, order, axis=1)[rows]
+
+        full_rows = np.nonzero(need_full)[0].astype(np.int32)
+        if len(full_rows):
+            fb = _bucket(len(full_rows))
+            rows_pad = np.pad(full_rows, (0, fb - len(full_rows)),
+                              constant_values=full_rows[0])
+            ids, dist = _spill_assign(
+                self.proxies[jnp.asarray(rows_pad)], self.centroids,
+                spill=spill, block_size=fb,
+                use_kernel=self._use_kernel(),
+                interpret=self.cfg.interpret)
+            self.spill_ids[full_rows] = np.asarray(ids)[:len(full_rows)]
+            self.spill_dist[full_rows] = np.asarray(dist)[:len(full_rows)]
+
+        # 4. re-home the mass ledger: any row whose primary cluster moved
+        #    (touched rows relative to their provisional fold, repaired
+        #    rows relative to their old primary) carries its stored proxy
+        #    to the new primary.  The receiving clusters' centroids are
+        #    deliberately not recomputed this round (the no-cascade rule);
+        #    they will be recomputed from this exact ledger the next time
+        #    a refold touches them.
+        ledger = old_ids[:, 0].copy()
+        ledger[touched] = a_prov
+        new_prim = self.spill_ids[:, 0]
+        moved = np.nonzero(ledger != new_prim)[0]
+        if len(moved):
+            pm = np.asarray(self.proxies[jnp.asarray(moved)])
+            np.add.at(self._sums, ledger[moved], -pm)
+            np.add.at(self._counts, ledger[moved], -1)
+            np.add.at(self._sums, new_prim[moved], pm)
+            np.add.at(self._counts, new_prim[moved], 1)
+
+        reassigned = int((self.spill_ids != old_ids).any(axis=1).sum())
+        if reassigned:
+            self._rebuild_members()
+        self.last_refold = RefoldStats(
+            n_touched=int(touched.size), n_changed_clusters=len(changed),
+            n_reassigned=reassigned, n_full_rows=len(full_rows),
+            n_certified=self.n_users - len(full_rows))
+        return self.last_refold
+
+    # -- diagnostics -------------------------------------------------------
+    def check_consistent(self, ratings: jnp.ndarray,
+                         means: jnp.ndarray) -> bool:
+        """Assert spill lists/distances and proxies equal a cold
+        reassignment against the current centroids and basis, and the mass
+        ledger equals a cold fold by primary cluster (the refold
+        invariants); raises on mismatch."""
+        p_cold = np.asarray(self._proxy_rows(ratings, means))
+        errs = []
+        if not np.array_equal(p_cold, np.asarray(self.proxies)):
+            errs.append("proxies")
+        cold_counts = np.bincount(self.assign, minlength=self.n_clusters)
+        if not np.array_equal(cold_counts, self._counts):
+            errs.append("mass counts")
+        cold_sums = np.zeros_like(self._sums)
+        np.add.at(cold_sums, self.assign, p_cold)
+        # the ledger is maintained by exact-value add/remove pairs; only
+        # the rounding of the running sums themselves can drift
+        if not np.allclose(cold_sums, self._sums, atol=1e-3):
+            errs.append("mass sums")
+        ids, dist = _spill_assign(
+            jnp.asarray(p_cold), self.centroids,
+            spill=self.spill_ids.shape[1],
+            block_size=min(self.cfg.kmeans_block, self.n_users),
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        if not np.array_equal(np.asarray(ids), self.spill_ids):
+            errs.append("spill assignments")
+        if not np.array_equal(np.asarray(dist), self.spill_dist):
+            errs.append("spill distances")
+        if errs:
+            raise RuntimeError(
+                "index diverged from a cold reassignment: "
+                f"{', '.join(errs)}")
+        return True
+
+    def member_counts(self) -> np.ndarray:
+        return np.array([len(m) for m in self._members])

@@ -1,0 +1,148 @@
+"""Blocked mini-batch k-means over mean-centered rating rows.
+
+The clustered candidate-generation index partitions users by taste: each
+user's dense rating row is mean-centered over its *rated* entries
+(``z = (r - mean_u) · 1[r > 0]``, so a zero stays "no information" rather
+than "strong dislike") and Lloyd iterations run over fixed-order user
+blocks — the mini-batches — folding per-cluster sums/counts on device and
+updating centroids once per sweep.  Because every block is folded every
+iteration in a fixed order, the result is deterministic per
+``(seed, shape)``: same centroids, same assignments, bit for bit.
+
+Empty clusters are re-seeded deterministically to the rows *farthest* from
+their current centroid (ties broken by lowest row id), the standard
+farthest-point repair that keeps all ``n_clusters`` partitions live.
+
+Distances go through :func:`repro.kernels.cluster.centroid_distances` —
+the fused Pallas kernel on TPU, the jnp oracle elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cluster import centroid_distances
+
+
+def center_rows(ratings: jnp.ndarray, means: jnp.ndarray) -> jnp.ndarray:
+    """Mean-centered rating rows: rated cells become (r - mean), rest 0."""
+    return jnp.where(ratings > 0, ratings - means[:, None], 0.0)
+
+
+def normalize_rows(z: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """L2-normalize rows (spherical k-means feature map).
+
+    A raw centered row's norm grows with the user's *activity* (√#rated),
+    so Euclidean k-means on raw rows clusters by rating count — one giant
+    near-origin cluster of typical users.  Similarity search cares about
+    taste *direction*, so the index clusters unit rows by default.
+    """
+    n = jnp.sqrt(jnp.sum(z * z, axis=-1, keepdims=True))
+    return z / jnp.maximum(n, eps)
+
+
+@dataclasses.dataclass
+class KMeansStats:
+    """What one ``kmeans`` run did (the re-seed count drives a test)."""
+    iters: int
+    n_reseeds: int
+    inertia: float          # sum of squared distances to assigned centroids
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "n_clusters",
+                                             "use_kernel", "interpret"))
+def _sweep(z, valid, centroids, *, block_size, n_clusters, use_kernel,
+           interpret):
+    """One blocked Lloyd sweep: assign every row, fold cluster sums/counts.
+
+    ``z`` is padded to a multiple of ``block_size``; ``valid`` masks the
+    padding rows out of the fold (their assignment is scattered with
+    ``mode='drop'`` via an out-of-range cluster id).
+    """
+    d_feat = z.shape[1]
+    blocks = z.reshape(-1, block_size, d_feat)
+    vblocks = valid.reshape(-1, block_size)
+
+    def body(carry, inp):
+        sums, counts = carry
+        blk, vb = inp
+        d = centroid_distances(blk, centroids, use_kernel=use_kernel,
+                               interpret=interpret)
+        a = jnp.argmin(d, axis=1).astype(jnp.int32)   # ties → lowest id
+        bd = jnp.min(d, axis=1)
+        a_fold = jnp.where(vb, a, n_clusters)          # padding → dropped
+        sums = sums.at[a_fold].add(blk, mode="drop")
+        counts = counts.at[a_fold].add(1, mode="drop")
+        return (sums, counts), (a, bd)
+
+    init = (jnp.zeros((n_clusters, d_feat), jnp.float32),
+            jnp.zeros((n_clusters,), jnp.int32))
+    (sums, counts), (assign, best_d) = jax.lax.scan(body, init,
+                                                    (blocks, vblocks))
+    return (sums, counts, assign.reshape(-1), best_d.reshape(-1))
+
+
+def _pad_rows(z: jnp.ndarray, block_size: int):
+    n = z.shape[0]
+    rem = n % block_size
+    valid = np.zeros((n + (block_size - rem if rem else 0),), bool)
+    valid[:n] = True
+    if rem:
+        z = jnp.pad(z, ((0, block_size - rem), (0, 0)))
+    return z, jnp.asarray(valid)
+
+
+def kmeans(z: jnp.ndarray, n_clusters: int, *, seed: int = 0, iters: int = 8,
+           block_size: int = 2048, use_kernel: bool = False,
+           interpret: bool = False
+           ) -> Tuple[jnp.ndarray, np.ndarray, np.ndarray, KMeansStats]:
+    """Deterministic blocked k-means.
+
+    Returns ``(centroids (C, D), assign (U,), best_dist (U,), stats)`` where
+    ``assign[u]`` is the canonical nearest centroid of row ``u`` (ties →
+    lowest cluster id) and ``best_dist[u]`` its squared distance — the
+    invariant the index's refold certificate maintains under updates.
+    """
+    n_rows, d_feat = z.shape
+    if not 1 <= n_clusters <= n_rows:
+        raise ValueError(f"need 1 <= n_clusters <= {n_rows}, "
+                         f"got {n_clusters}")
+    block_size = min(block_size, n_rows)
+    rng = np.random.default_rng(seed)
+    init_rows = np.sort(rng.choice(n_rows, size=n_clusters, replace=False))
+    centroids = z[jnp.asarray(init_rows)]
+
+    z_p, valid = _pad_rows(z, block_size)
+    n_reseeds = 0
+    for _ in range(iters):
+        sums, counts, assign, best_d = _sweep(
+            z_p, valid, centroids, block_size=block_size,
+            n_clusters=n_clusters, use_kernel=use_kernel,
+            interpret=interpret)
+        counts_np = np.asarray(counts)
+        new_c = np.asarray(sums) / np.maximum(counts_np, 1)[:, None]
+        empty = np.nonzero(counts_np == 0)[0]
+        if len(empty):
+            # farthest-point re-seed: rows worst-served by their centroid,
+            # lowest row id on ties — deterministic
+            bd = np.asarray(best_d)[:n_rows]
+            donors = np.lexsort((np.arange(n_rows), -bd))[:len(empty)]
+            new_c[empty] = np.asarray(z)[donors]
+            n_reseeds += len(empty)
+        centroids = jnp.asarray(new_c, jnp.float32)
+
+    # final canonical assignment against the converged centroids
+    _, _, assign, best_d = _sweep(
+        z_p, valid, centroids, block_size=block_size, n_clusters=n_clusters,
+        use_kernel=use_kernel, interpret=interpret)
+    assign = np.array(assign[:n_rows])        # writable host copies: the
+    best_d = np.array(best_d[:n_rows])        # index repairs them in place
+    stats = KMeansStats(iters=iters, n_reseeds=n_reseeds,
+                        inertia=float(best_d.sum()))
+    return centroids, assign, best_d, stats

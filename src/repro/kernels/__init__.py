@@ -5,6 +5,8 @@ wrapper in ``ops.py``; kernels are validated in interpret mode on CPU and
 target Mosaic on real TPU.
 """
 
+from repro.kernels.cluster import centroid_distances, fused_centroid_distances
 from repro.kernels.ops import embedding_bag, flash_attention, pairwise_similarity
 
-__all__ = ["embedding_bag", "flash_attention", "pairwise_similarity"]
+__all__ = ["centroid_distances", "embedding_bag", "flash_attention",
+           "fused_centroid_distances", "pairwise_similarity"]

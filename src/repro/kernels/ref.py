@@ -28,6 +28,23 @@ def similarity_ref(ra: jnp.ndarray, rb: jnp.ndarray, measure: str = "all"):
     return out[measure]
 
 
+# -- fused centroid distances -------------------------------------------------
+
+def centroid_distances_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(m, D) rows × (n, D) centroids → (m, n) squared Euclidean distances.
+
+    Oracle for ``repro.kernels.cluster.fused_centroid_distances``; clamped at
+    zero like the kernel so float cancellation never yields tiny negatives.
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)
+    cc = jnp.sum(c * c, axis=-1, keepdims=True).T
+    d = xx - 2.0 * jnp.matmul(x, c.T,
+                              precision=jax.lax.Precision.HIGHEST) + cc
+    return jnp.maximum(d, 0.0)
+
+
 # -- attention ----------------------------------------------------------------
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

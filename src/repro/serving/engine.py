@@ -20,8 +20,9 @@ import functools
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +70,12 @@ class BatchingServer:
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # per-batch / per-request telemetry: bounded deques (append-only,
+        # read whole under the GIL, so stats() needs no lock); a long-lived
+        # server keeps a sliding window rather than unbounded history
+        self._lat_ms: "deque" = deque(maxlen=100_000)
+        self._batch_fill: "deque" = deque(maxlen=20_000)
+        self._queue_depth: "deque" = deque(maxlen=20_000)
         # warm the executable with the padded batch shape
         self._run_padded(jnp.zeros((self.max_batch,), jnp.int32))
 
@@ -95,7 +102,7 @@ class BatchingServer:
     # -- batcher -----------------------------------------------------------
     def _loop(self):
         while not self._stop.is_set():
-            batch: List = []
+            batch: list = []
             deadline = None
             while len(batch) < self.max_batch:
                 timeout = self.max_wait if deadline is None else \
@@ -115,6 +122,9 @@ class BatchingServer:
 
     def _run_batch(self, batch):
         self.n_batches += 1
+        # depth at launch: what this batch drained plus what is still queued
+        self._queue_depth.append(len(batch) + self._q.qsize())
+        self._batch_fill.append(len(batch) / self.max_batch)
         users = np.zeros((self.max_batch,), np.int32)
         for j, (u, _, _) in enumerate(batch):
             users[j] = u
@@ -123,6 +133,25 @@ class BatchingServer:
         items = np.asarray(items)
         now = time.perf_counter()
         for j, (u, t0, fut) in enumerate(batch):
+            lat = (now - t0) * 1e3
+            self._lat_ms.append(lat)
             fut.set_result(Recommendation(
-                user=u, items=items[j], scores=scores[j],
-                latency_ms=(now - t0) * 1e3))
+                user=u, items=items[j], scores=scores[j], latency_ms=lat))
+
+    # -- telemetry ---------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving-tier health: latency percentiles, batching efficiency,
+        and queue pressure over the telemetry window (the last ~100k
+        requests / ~20k batches); ``n_batches`` counts the full lifetime."""
+        lat = sorted(self._lat_ms)
+        n = len(lat)
+        return {
+            "n_requests": n,
+            "n_batches": self.n_batches,
+            "latency_p50_ms": lat[n // 2] if n else 0.0,
+            "latency_p99_ms": lat[min(int(n * 0.99), n - 1)] if n else 0.0,
+            "mean_batch_fill": (sum(self._batch_fill)
+                                / max(len(self._batch_fill), 1)),
+            "mean_queue_depth": (sum(self._queue_depth)
+                                 / max(len(self._queue_depth), 1)),
+        }

@@ -1,0 +1,273 @@
+"""Clustered candidate-generation index: kernel oracle, k-means
+determinism, degenerate exactness, recall floors, and update consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CFEngine
+from repro.core import neighbors as nb
+from repro.core import similarity as sim
+from repro.index import ClusteredIndex, IndexConfig, kmeans
+from repro.index.kmeans import center_rows, normalize_rows
+from repro.kernels.cluster import fused_centroid_distances
+from repro.kernels.ref import centroid_distances_ref
+
+
+def _ratings(rng, u, d, density=0.4):
+    return jnp.asarray((rng.integers(1, 6, (u, d))
+                        * (rng.random((u, d)) < density)).astype(np.float32))
+
+
+# -- fused kernel vs oracle ---------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 4, 16), (100, 7, 130), (33, 9, 5)])
+def test_centroid_kernel_matches_ref(shape, rng):
+    m, n, d = shape
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    got = fused_centroid_distances(x, c, bm=32, bn=16, bk=64, interpret=True)
+    ref = centroid_distances_ref(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_centroid_kernel_in_kmeans(rng):
+    """The index's k-means routes distances through the kernel when asked."""
+    z = normalize_rows(jnp.asarray(rng.normal(size=(64, 32))
+                                   .astype(np.float32)))
+    c_ref, a_ref, d_ref, _ = kmeans(z, 8, seed=0, iters=3)
+    c_k, a_k, d_k, _ = kmeans(z, 8, seed=0, iters=3, use_kernel=True,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(c_ref), np.asarray(c_k), atol=1e-4)
+    assert np.array_equal(a_ref, a_k)
+
+
+# -- k-means ------------------------------------------------------------------
+
+def test_kmeans_deterministic_per_seed_and_shape(rng):
+    z = normalize_rows(_ratings(rng, 96, 40))
+    a = kmeans(z, 12, seed=7, iters=5)
+    b = kmeans(z, 12, seed=7, iters=5)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(a[1], b[1])
+    np.testing.assert_array_equal(a[2], b[2])
+    c = kmeans(z, 12, seed=8, iters=5)
+    assert not np.array_equal(a[1], c[1])   # different seed, different fit
+
+
+def test_kmeans_assignment_is_canonical_argmin(rng):
+    z = normalize_rows(_ratings(rng, 80, 32))
+    cents, assign, best_d, _ = kmeans(z, 10, seed=1, iters=4)
+    d = np.asarray(centroid_distances_ref(z, cents))
+    np.testing.assert_array_equal(assign, d.argmin(axis=1))
+    # jit fusion may re-associate the distance arithmetic vs the eager
+    # oracle; values agree to float tolerance, the argmin is what is pinned
+    np.testing.assert_allclose(best_d, d.min(axis=1), atol=1e-5)
+
+
+def test_kmeans_empty_cluster_reseed(rng):
+    """More clusters than distinct points forces the farthest-point
+    re-seed path; the fit must stay deterministic and report it."""
+    base = rng.normal(size=(3, 16)).astype(np.float32)
+    z = normalize_rows(jnp.asarray(
+        np.vstack([base[i % 3] for i in range(24)])))
+    # 3 exactly-distinct points, 8 clusters: duplicate init centroids lose
+    # every canonical tie and go empty
+    cents, assign, _, stats = kmeans(z, 8, seed=0, iters=6)
+    assert stats.n_reseeds > 0
+    cents2, assign2, _, stats2 = kmeans(z, 8, seed=0, iters=6)
+    np.testing.assert_array_equal(np.asarray(cents), np.asarray(cents2))
+    assert stats.n_reseeds == stats2.n_reseeds
+
+
+def test_kmeans_rejects_bad_cluster_count(rng):
+    z = normalize_rows(_ratings(rng, 16, 8))
+    with pytest.raises(ValueError):
+        kmeans(z, 0)
+    with pytest.raises(ValueError):
+        kmeans(z, 17)
+
+
+# -- index: degenerate exactness ---------------------------------------------
+
+@pytest.mark.parametrize("measure", sim.SIMILARITY_MEASURES)
+def test_full_probe_no_filter_is_bit_identical(measure, rng):
+    """n_probe = n_clusters with no shortlist cap must reproduce the exact
+    engine bit for bit — scores and canonical tie-broken ids."""
+    r = _ratings(rng, 96, 64)
+    means = sim.user_stats(r)[2]
+    ix = ClusteredIndex(IndexConfig(n_clusters=8, n_probe=8,
+                                    rerank_frac=0.0)).fit(r, means)
+    s_ex, i_ex = nb.topk_neighbors(r, 10, measure=measure, block_size=32)
+    s_ap, i_ap = ix.query(r, means, k=10, measure=measure)
+    np.testing.assert_array_equal(np.asarray(s_ex), np.asarray(s_ap))
+    np.testing.assert_array_equal(np.asarray(i_ex), np.asarray(i_ap))
+
+
+def test_facade_degenerate_approx_matches_exact_fit(rng):
+    r = _ratings(rng, 64, 48)
+    cfg = IndexConfig(n_clusters=8, n_probe=8, rerank_frac=0.0)
+    ex = CFEngine(r, measure="cosine", k=6, block_size=16).fit()
+    ap = CFEngine(r, measure="cosine", k=6, neighbor_mode="approx",
+                  index_cfg=cfg).fit()
+    np.testing.assert_array_equal(np.asarray(ex.scores), np.asarray(ap.scores))
+    np.testing.assert_array_equal(np.asarray(ex.idx), np.asarray(ap.idx))
+    assert ex.recall_vs_exact(sample=32) == 1.0
+    assert ap.recall_vs_exact(sample=32) == 1.0
+
+
+def test_sparse_rerank_scores_are_true_similarities(rng):
+    """Filtered-path scores must equal the exact similarity values of the
+    returned (query, neighbor) pairs."""
+    r = _ratings(rng, 128, 64)
+    means = sim.user_stats(r)[2]
+    ix = ClusteredIndex(IndexConfig(n_clusters=8, features="raw",
+                                    rerank_frac=0.2)).fit(r, means)
+    for measure in sim.SIMILARITY_MEASURES:
+        users = np.array([0, 17, 65, 127], np.int32)
+        s, i = ix.query(r, means, users, k=6, measure=measure)
+        full = np.asarray(sim.pairwise_similarity(
+            r[jnp.asarray(users)], r, measure=measure))
+        s, i = np.asarray(s), np.asarray(i)
+        for row in range(len(users)):
+            for col in range(6):
+                if i[row, col] >= 0:
+                    np.testing.assert_allclose(
+                        s[row, col], full[row, i[row, col]], atol=2e-5)
+
+
+# -- index: recall ------------------------------------------------------------
+
+def test_recall_floor_small():
+    """Tier-1-sized surrogate: the two-stage pipeline must recover ≥90% of
+    exact neighbors while exactly reranking well under half the rows."""
+    from repro.data import load_ml1m_synthetic
+    train, _, _ = load_ml1m_synthetic(n_users=512, n_items=256, seed=0)
+    r = jnp.asarray(train)
+    means = sim.user_stats(r)[2]
+    # n_probe below the pool-shortcut threshold so the cluster-union
+    # candidate path (not the full-pool proxy scan) is what's tested
+    ix = ClusteredIndex(IndexConfig(n_clusters=16, n_probe=5, seed=0,
+                                    features="raw")).fit(r, means)
+    i_ex = np.asarray(nb.topk_neighbors(r, 10, measure="cosine",
+                                        block_size=128)[1])
+    _, i_ap = ix.query(r, means, k=10, measure="cosine")
+    i_ap = np.asarray(i_ap)
+    rec = np.mean([len(set(i_ex[u]) & set(i_ap[u])) / 10
+                   for u in range(512)])
+    frac = ix.last_query.rerank_fraction
+    assert rec >= 0.90, (rec, frac)
+    assert frac < 0.30, frac
+
+
+@pytest.mark.slow
+def test_recall_floor_ml1m_8192():
+    """The acceptance bar: recall@20 ≥ 0.95 on the U=8192 ML-1M surrogate
+    while exactly reranking < 25% of candidate rows."""
+    from repro.data import load_ml1m_synthetic
+    train, _, _ = load_ml1m_synthetic(n_users=8192, seed=0)
+    r = jnp.asarray(train)
+    means = sim.user_stats(r)[2]
+    ix = ClusteredIndex(IndexConfig(seed=0, features="raw")).fit(r, means)
+    i_ex = np.asarray(nb.topk_neighbors(r, 20, measure="cosine",
+                                        block_size=1024)[1])
+    _, i_ap = ix.query(r, means, k=20, measure="cosine")
+    i_ap = np.asarray(i_ap)
+    rec = np.mean([len(set(i_ex[u]) & set(i_ap[u])) / 20
+                   for u in range(8192)])
+    frac = ix.last_query.rerank_fraction
+    assert rec >= 0.95, (rec, frac)
+    assert frac < 0.25, frac
+
+
+# -- index: updates -----------------------------------------------------------
+
+def test_update_keeps_index_consistent(rng):
+    """The refold certificate: after a stream of updates the spill lists
+    equal a cold reassignment against the current centroids."""
+    r = _ratings(rng, 96, 48)
+    eng = CFEngine(r, measure="cosine", k=6, neighbor_mode="approx",
+                   index_cfg=IndexConfig(n_clusters=12, seed=0,
+                                         features="raw")).fit()
+    for _ in range(4):
+        us = rng.choice(96, 5, replace=False).astype(np.int32)
+        iids = rng.integers(0, 48, 5).astype(np.int32)
+        vals = rng.integers(0, 6, 5).astype(np.float32)
+        st = eng.update_ratings(us, iids, vals, oracle_check=True)
+        assert st.oracle_ok
+    assert eng.index.check_consistent(eng.ratings, eng.means)
+
+
+def test_update_refold_is_sublinear_in_work(rng):
+    """A small delta must certify most rows instead of recomputing them."""
+    r = _ratings(rng, 256, 64)
+    eng = CFEngine(r, measure="cosine", k=6, neighbor_mode="approx",
+                   index_cfg=IndexConfig(n_clusters=64, seed=0, spill=1,
+                                         features="raw")).fit()
+    us = rng.choice(256, 3, replace=False).astype(np.int32)
+    eng.update_ratings(us, rng.integers(0, 64, 3).astype(np.int32),
+                       rng.integers(1, 6, 3).astype(np.float32))
+    rf = eng.index.last_refold
+    assert rf.n_touched == 3
+    assert rf.n_certified > 128, rf    # most rows ride the certificate
+    assert eng.index.check_consistent(eng.ratings, eng.means)
+
+
+def test_update_approx_means_match_cold(rng):
+    r = _ratings(rng, 64, 32)
+    eng = CFEngine(r, measure="cosine", k=5, neighbor_mode="approx",
+                   index_cfg=IndexConfig(n_clusters=8, seed=0)).fit()
+    us = rng.choice(64, 4, replace=False).astype(np.int32)
+    eng.update_ratings(us, rng.integers(0, 32, 4).astype(np.int32),
+                       rng.integers(1, 6, 4).astype(np.float32))
+    cold = sim.user_stats(eng.ratings)[2]
+    np.testing.assert_array_equal(np.asarray(eng.means), np.asarray(cold))
+
+
+def test_new_user_onboarding_approx(rng):
+    """A cold user gaining ratings must enter real clusters and get real
+    neighbors through the index path."""
+    r = np.asarray(_ratings(rng, 64, 32)).copy()
+    r[5] = 0.0
+    eng = CFEngine(jnp.asarray(r), measure="cosine", k=5,
+                   neighbor_mode="approx",
+                   index_cfg=IndexConfig(n_clusters=8, seed=0,
+                                         features="raw")).fit()
+    iids = rng.choice(32, 10, replace=False).astype(np.int32)
+    vals = rng.integers(1, 6, 10).astype(np.float32)
+    st = eng.update_ratings(np.full(10, 5, np.int32), iids, vals,
+                            oracle_check=True)
+    assert st.oracle_ok
+    assert int(np.asarray(eng.idx)[5].max()) >= 0
+    assert eng.index.check_consistent(eng.ratings, eng.means)
+
+
+# -- index: config validation -------------------------------------------------
+
+def test_index_config_validation(rng):
+    r = _ratings(rng, 16, 8)
+    with pytest.raises(ValueError):
+        ClusteredIndex(IndexConfig(features="whitened"))
+    with pytest.raises(ValueError):
+        ClusteredIndex(IndexConfig(spill=0))
+    with pytest.raises(ValueError):
+        CFEngine(r, neighbor_mode="fuzzy")
+    ix = ClusteredIndex(IndexConfig(n_clusters=4))
+    with pytest.raises(RuntimeError):
+        ix.query(r, sim.user_stats(r)[2], k=3)
+
+
+@pytest.mark.slow
+def test_update_oracle_stress_approx(rng):
+    """Oracle sweep: many small deltas, every one consistency-checked."""
+    r = _ratings(rng, 192, 64)
+    eng = CFEngine(r, measure="pcc", k=8, neighbor_mode="approx",
+                   index_cfg=IndexConfig(n_clusters=16, seed=0)).fit()
+    for _ in range(10):
+        n = int(rng.integers(1, 12))
+        us = rng.choice(192, n, replace=False).astype(np.int32)
+        st = eng.update_ratings(us, rng.integers(0, 64, n).astype(np.int32),
+                                rng.integers(0, 6, n).astype(np.float32),
+                                oracle_check=True)
+        assert st.oracle_ok
