@@ -27,7 +27,7 @@ from repro.core.similarity import SIMILARITY_MEASURES, user_means
 
 @dataclasses.dataclass
 class CFConfig:
-    measure: str = "pcc"            # jaccard | cosine | pcc
+    measure: str = "pcc"            # jaccard | cosine | pcc | pcc_sig
     top_k: int = 40                 # neighbors per user (paper's top-N)
     engine: str = "sequential"      # sequential | sharded | ring
     block_size: int = 1024          # candidate-block tile height

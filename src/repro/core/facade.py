@@ -66,6 +66,12 @@ from repro.kernels.similarity import fused_similarity
 
 BACKENDS = ("sequential", "sharded", "ring", "pallas")
 NEIGHBOR_MODES = ("exact", "approx")
+RECOMMEND_MODES = ("exact", "approx")
+
+# exact-recommend streaming: users per block and items per predict tile —
+# peak intermediate is O(user_block · k · item_block), never O(m·k·I)
+USER_BLOCK = 1024
+ITEM_BLOCK = 512
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -151,6 +157,21 @@ def _rows_topk(ratings, q_ids, *, k, measure, block_size):
 _user_stats = jax.jit(sim.user_stats)
 
 
+@functools.partial(jax.jit, static_argnames=("n", "item_block"))
+def _recommend_block(ratings, gather_src, scores, idx, means, q_means,
+                     q_ids, *, n, item_block):
+    """Exact recommend for one (padded) user block: blocked prediction
+    over item tiles (the (m, k, I) intermediate is never materialised),
+    seen-mask, canonical top-n with -1 for unfillable slots."""
+    n_users = ratings.shape[0]
+    safe = jnp.clip(q_ids, 0, n_users - 1)
+    pred = pred_mod.predict_from_neighbors_blocked(
+        ratings, scores, idx, means=means, query_means=q_means,
+        item_block=item_block, gather_src=gather_src)
+    seen = ratings[safe] > 0
+    return pred_mod.topn_unseen(pred, seen, n)
+
+
 @jax.jit
 def _refold_stats(ratings, cnt, tot, ids):
     """Rank-1 refold: recompute count/total for the touched rows only.
@@ -197,6 +218,7 @@ class CFEngine:
                  backend: str = "sequential", mesh: Optional[Mesh] = None,
                  axis: str = "data", block_size: int = 1024,
                  neighbor_mode: str = "exact", index_cfg=None,
+                 recommend_mode: str = "exact", item_index_cfg=None,
                  interpret: Optional[bool] = None):
         if measure not in sim.SIMILARITY_MEASURES:
             raise ValueError(f"unknown measure {measure!r}; want one of "
@@ -207,6 +229,9 @@ class CFEngine:
         if neighbor_mode not in NEIGHBOR_MODES:
             raise ValueError(f"unknown neighbor_mode {neighbor_mode!r}; "
                              f"want one of {NEIGHBOR_MODES}")
+        if recommend_mode not in RECOMMEND_MODES:
+            raise ValueError(f"unknown recommend_mode {recommend_mode!r}; "
+                             f"want one of {RECOMMEND_MODES}")
         self.ratings = jnp.asarray(ratings, jnp.float32)
         self.measure = measure
         self.k = int(k)
@@ -226,8 +251,17 @@ class CFEngine:
             from repro.index import ClusteredIndex, IndexConfig
             if index_cfg is None:
                 index_cfg = IndexConfig(
-                    features="centered" if measure == "pcc" else "raw")
+                    features="centered" if measure in ("pcc", "pcc_sig")
+                    else "raw")
             self.index = ClusteredIndex(index_cfg)
+
+        self.recommend_mode = recommend_mode
+        self.item_index = None
+        if recommend_mode == "approx":
+            from repro.index import ItemClusteredIndex, ItemIndexConfig
+            if item_index_cfg is None:
+                item_index_cfg = ItemIndexConfig()
+            self.item_index = ItemClusteredIndex(item_index_cfg)
 
         self.scores: Optional[jnp.ndarray] = None    # (U, k)
         self.idx: Optional[jnp.ndarray] = None       # (U, k)
@@ -235,6 +269,7 @@ class CFEngine:
         self._cnt = None                             # (U,) rated-item counts
         self._tot = None                             # (U,) rating sums
         self._snapshot: Optional[tuple] = None       # atomically-published
+        self._gather_cache: Optional[tuple] = None   # int8 recommend operand
         self.fit_seconds = 0.0
         self.last_update: Optional[UpdateStats] = None
 
@@ -263,6 +298,8 @@ class CFEngine:
                 self.ratings, self.means, k=self.k, measure=self.measure)
         else:
             self.scores, self.idx = self._topk(self.ratings)
+        if self.item_index is not None:
+            self.item_index.fit(self.ratings, self.means)
         self.scores = jax.block_until_ready(self.scores)
         self._snapshot = (self.ratings, self.scores, self.idx, self.means)
         self.fit_seconds = time.perf_counter() - t0
@@ -364,6 +401,9 @@ class CFEngine:
             self.ratings, self._cnt, self._tot, pad_touch_j)
         if self.neighbor_mode == "approx":
             self.index.refold(self.ratings, self.means, touched)
+        if self.item_index is not None:
+            self.item_index.refold(self.ratings, self.means, touched,
+                                   np.unique(item_ids))
 
         # the pallas backend's scores carry the fused kernel's rounding; the
         # XLA-scored repair path would mix incomparable floats into the
@@ -439,7 +479,10 @@ class CFEngine:
         """Exact mode: assert cache == cold full recompute, bit for bit.
         Approx mode: the cache is defined by the index's candidate policy,
         so the oracle instead asserts the *index* invariant — assignments
-        and proxies equal a cold reassignment — plus exact means."""
+        and proxies equal a cold reassignment — plus exact means.  A
+        fitted item index is consistency-checked in either mode."""
+        if self.item_index is not None:
+            self.item_index.check_consistent(self.ratings, self.means)
         if self.neighbor_mode == "approx":
             ok = self.index.check_consistent(self.ratings, self.means)
             _, _, ref_m = _user_stats(self.ratings)
@@ -507,21 +550,126 @@ class CFEngine:
             raise RuntimeError("call fit() first")
         return self.scores, self.idx
 
+    def _gather_source(self, ratings):
+        """int8 gather operand for the recommend/predict gathers when the
+        matrix round-trips exactly (cached per ratings array — a rating
+        update replaces the array, which invalidates by identity)."""
+        if self._gather_cache is not None and \
+                self._gather_cache[0] is ratings:
+            return self._gather_cache[1]
+        src = pred_mod.make_gather_source(ratings)
+        self._gather_cache = (ratings, src)
+        return src
+
     def predict(self, user_ids=None) -> jnp.ndarray:
-        """Predicted full item rows for ``user_ids`` (default: all users)."""
+        """Predicted full item rows for ``user_ids`` (default: all users).
+
+        Streams over item tiles (``predict_from_neighbors_blocked``), so
+        the ``(m, k, I)`` neighbor-rating intermediate is never
+        materialised; the returned ``(m, I)`` matrix is the only large
+        allocation.  Bit-identical to the one-shot gather form.  Reads
+        the atomically-published snapshot, like every inference path.
+        """
         if not self.fitted:
             raise RuntimeError("call fit() first")
-        if user_ids is None:
-            return pred_mod.predict_from_neighbors(
-                self.ratings, self.scores, self.idx, means=self.means)
-        u = jnp.asarray(user_ids)
-        return pred_mod.predict_from_neighbors(
-            self.ratings, self.scores[u], self.idx[u], means=self.means,
-            query_means=self.means[u])
+        ratings, scores, idx, means = self.snapshot()
+        if user_ids is not None:
+            u = jnp.asarray(user_ids)
+            scores, idx, q_means = scores[u], idx[u], means[u]
+        else:
+            q_means = means
+        return pred_mod.predict_from_neighbors_blocked(
+            ratings, scores, idx, means=means,
+            query_means=q_means, item_block=ITEM_BLOCK,
+            gather_src=self._gather_source(ratings))
 
-    def recommend(self, user_ids=None, n: int = 10):
-        """Top-n unseen items (scores, item ids) for ``user_ids``."""
-        pred = self.predict(user_ids)
-        seen = (self.ratings if user_ids is None
-                else self.ratings[jnp.asarray(user_ids)]) > 0
-        return pred_mod.recommend_topn(pred, seen, n)
+    def recommend(self, user_ids=None, n: int = 10, *,
+                  mode: Optional[str] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Top-n unseen items ``(scores, item ids)`` for ``user_ids``.
+
+        ``mode`` overrides the engine's ``recommend_mode`` per call
+        (``"approx"`` requires a fitted item index).  The exact path
+        streams user blocks × item tiles — peak memory O(UB·k·IB); the
+        approx path runs the two-stage item-index pipeline and returns
+        exact predicted ratings for an approximate candidate set.  Slots a
+        user cannot fill (fewer unseen items than ``n``) come back as item
+        -1 with score -inf in both modes; already-rated items are never
+        returned.
+
+        Model arrays come from the atomically-published snapshot, so a
+        concurrent ``update_ratings`` can never produce a torn read (the
+        item index's internal cluster state only shapes the *candidate*
+        set, never the returned scores, so index mutation mid-call is a
+        quality concern, not a correctness one).
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        mode = mode or self.recommend_mode
+        if mode not in RECOMMEND_MODES:
+            raise ValueError(f"unknown recommend mode {mode!r}")
+        ratings, scores, idx, means = self.snapshot()
+        uids = (np.arange(self.n_users, dtype=np.int32) if user_ids is None
+                else np.atleast_1d(np.asarray(user_ids, np.int32)))
+        if mode == "approx":
+            if self.item_index is None or not self.item_index.fitted:
+                raise RuntimeError(
+                    "recommend(mode='approx') needs a fitted item index — "
+                    "construct with recommend_mode='approx' and fit()")
+            # taste-cluster query order: users of one cluster share
+            # neighbors, so the support scorer re-reads the same table
+            # rows while they are still cache-resident; results are
+            # scattered back to the caller's order
+            if self.index is not None and self.index.fitted \
+                    and len(uids) > 4096:
+                perm = np.argsort(self.index.assign[uids], kind="stable")
+                s, i = self.item_index.recommend(
+                    ratings, means, scores, idx, uids[perm], n=n)
+                inv = np.empty_like(perm)
+                inv[perm] = np.arange(len(perm))
+                return s[jnp.asarray(inv)], i[jnp.asarray(inv)]
+            return self.item_index.recommend(
+                ratings, means, scores, idx, uids, n=n)
+
+        src = self._gather_source(ratings)
+        out_s = np.empty((len(uids), n), np.float32)
+        out_i = np.empty((len(uids), n), np.int32)
+        ub = min(USER_BLOCK, _bucket(len(uids), self.n_users))
+        for lo in range(0, len(uids), ub):
+            ids = uids[lo:lo + ub]
+            ids_pad = np.full((ub,), self.n_users, np.int32)
+            ids_pad[:len(ids)] = ids
+            ids_j = jnp.asarray(ids_pad)
+            safe = jnp.clip(ids_j, 0, self.n_users - 1)
+            s, i = _recommend_block(
+                ratings, src, scores[safe], idx[safe],
+                means, means[safe], ids_j, n=n,
+                item_block=ITEM_BLOCK)
+            out_s[lo:lo + len(ids)] = np.asarray(s)[:len(ids)]
+            out_i[lo:lo + len(ids)] = np.asarray(i)[:len(ids)]
+        return jnp.asarray(out_s), jnp.asarray(out_i)
+
+    def recommend_recall_vs_exact(self, sample: int = 256, n: int = 10,
+                                  seed: int = 0) -> float:
+        """Mean recall@n of approx recommendations against the exact
+        blocked path on a seeded user sample — the recommend analogue of
+        ``recall_vs_exact``.  1.0 when the item index degenerates to full
+        probing with an uncapped shortlist."""
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        rng = np.random.default_rng(seed)
+        n_s = min(sample, self.n_users)
+        users = np.sort(rng.choice(self.n_users, n_s, replace=False)
+                        ).astype(np.int32)
+        _, ref_i = self.recommend(users, n, mode="exact")
+        _, got_i = self.recommend(users, n, mode="approx")
+        ref_i, got_i = np.asarray(ref_i), np.asarray(got_i)
+        hits = 0
+        total = 0
+        for row in range(n_s):
+            ref = set(int(j) for j in ref_i[row] if j >= 0)
+            if not ref:
+                continue
+            hits += len(ref & set(int(j) for j in got_i[row]))
+            total += len(ref)
+        return hits / max(total, 1)

@@ -7,9 +7,26 @@ uses:
               ───────────────────────────────────────────────────
                         Σ_{v ∈ N(u), v rated i} |s_uv|
 
-falling back to r̄_u when no selected neighbor rated item i.  Two forms are
-provided: a gather form (production; O(U·k·I) with k≪U) and a dense matmul
-form (oracle for tests).
+falling back to r̄_u when no selected neighbor rated item i.  Four forms are
+provided:
+
+* ``predict_from_neighbors`` — one-shot gather form; materialises the
+  ``(m, k, I)`` neighbor-rating intermediate, fine up to ~10⁴ users;
+* ``predict_from_neighbors_blocked`` — streams item tiles of width
+  ``item_block`` so peak memory is O(m·k·T), never O(m·k·I); bit-identical
+  to the one-shot form (the k-reduction per output element is unchanged,
+  tiling only splits the independent item axis).  Optionally routes each
+  tile through the fused Pallas kernel (``repro.kernels.predict``);
+* ``predict_items`` — scores only an explicit per-user candidate item list
+  (the exact rerank primitive of the two-stage recommend path), chunked
+  over the candidate axis with the same tile arithmetic, so a full
+  ascending candidate list reproduces the blocked form bit for bit;
+* ``predict_dense`` — dense matmul oracle for tests.
+
+``gather_src`` on the streaming forms accepts a cheaper gather operand for
+the same ratings (e.g. an int8 copy when every rating is a small integer —
+the gather is element-count bound and int8 moves ~4× less traffic); the
+cast back to f32 is exact, so results are unchanged bit for bit.
 """
 
 from __future__ import annotations
@@ -20,6 +37,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.similarity import user_means
+
+_DEN_EPS = 1e-8
+
+
+@jax.jit
+def _int8_exact(ratings):
+    """True iff every rating is an integer in [0, 127] — i.e. an int8 copy
+    round-trips exactly (MovieLens-style 0..5 matrices qualify)."""
+    return jnp.all((ratings >= 0) & (ratings <= 127)
+                   & (ratings == jnp.round(ratings)))
+
+
+def make_gather_source(ratings: jnp.ndarray) -> jnp.ndarray:
+    """Rating matrix as a gather operand: an int8 copy when that
+    round-trips exactly (the cast back to f32 is then exact, so results
+    are unchanged bit for bit at ~4× less gather traffic), the matrix
+    itself otherwise.  Callers cache the result per ratings array."""
+    return (ratings.astype(jnp.int8) if bool(_int8_exact(ratings))
+            else ratings)
+
+
+def _tile_predict(w, nbr, nb_means, query_means):
+    """Shared per-tile epilogue — the exact arithmetic of the one-shot
+    form restricted to one item tile (the item axis is embarrassingly
+    independent, so per-tile results concatenate bit-identically)."""
+    nb_mask = (nbr > 0).astype(jnp.float32)
+    dev = (nbr - nb_means[..., None]) * nb_mask
+    # explicit multiply+reduce (not einsum): the per-element k-reduction is
+    # then independent of the item-tile width, so any tiling of the item
+    # axis reproduces the one-shot result bit for bit (an einsum may pick a
+    # different contraction strategy per shape and round differently)
+    num = jnp.sum(w[..., None] * dev, axis=-2)
+    den = jnp.sum(w[..., None] * nb_mask, axis=-2)
+    pred = query_means[:, None] + num / jnp.maximum(den, _DEN_EPS)
+    pred = jnp.where(den > _DEN_EPS, pred, query_means[:, None])
+    return jnp.clip(pred, 1.0, 5.0)
 
 
 def predict_from_neighbors(ratings: jnp.ndarray, scores: jnp.ndarray,
@@ -37,6 +90,14 @@ def predict_from_neighbors(ratings: jnp.ndarray, scores: jnp.ndarray,
 
     Returns (m, I) predicted ratings.
     """
+    safe_idx, w, nb_means, query_means = _neighbor_inputs(
+        ratings, scores, idx, means, query_means)
+    nb_ratings = ratings[safe_idx]                            # (m, k, I)
+    return _tile_predict(w, nb_ratings, nb_means, query_means)
+
+
+def _neighbor_inputs(ratings, scores, idx, means, query_means):
+    """Common setup: masked weights, safe gather ids, neighbor means."""
     if means is None:
         means = user_means(ratings)
     if query_means is None:
@@ -44,19 +105,73 @@ def predict_from_neighbors(ratings: jnp.ndarray, scores: jnp.ndarray,
             raise ValueError("query_means is required when predicting for a "
                              "subset of users")
         query_means = means
-
     safe_idx = jnp.where(idx >= 0, idx, 0)
-    w = jnp.where((scores > 0.0) & (idx >= 0), scores, 0.0)   # (m, k)
-    nb_ratings = ratings[safe_idx]                            # (m, k, I)
-    nb_mask = (nb_ratings > 0).astype(jnp.float32)
-    nb_means = means[safe_idx]                                # (m, k)
-    dev = (nb_ratings - nb_means[..., None]) * nb_mask        # (m, k, I)
+    w = jnp.where((scores > 0.0) & (idx >= 0), scores, 0.0)
+    return safe_idx, w, means[safe_idx], query_means
 
-    num = jnp.einsum("mk,mki->mi", w, dev)
-    den = jnp.einsum("mk,mki->mi", w, nb_mask)
-    pred = query_means[:, None] + num / jnp.maximum(den, 1e-8)
-    pred = jnp.where(den > 1e-8, pred, query_means[:, None])
-    return jnp.clip(pred, 1.0, 5.0)
+
+def predict_from_neighbors_blocked(ratings: jnp.ndarray, scores: jnp.ndarray,
+                                   idx: jnp.ndarray, *,
+                                   means: jnp.ndarray | None = None,
+                                   query_means: jnp.ndarray | None = None,
+                                   item_block: int = 512,
+                                   gather_src: jnp.ndarray | None = None,
+                                   use_kernel: bool = False,
+                                   interpret: bool = False) -> jnp.ndarray:
+    """Blocked form of :func:`predict_from_neighbors`: stream over item
+    tiles of width ``item_block`` so the ``(m, k, I)`` neighbor-rating
+    intermediate is never materialised — peak memory O(m·k·item_block).
+
+    Bit-identical to the one-shot form.  With ``use_kernel`` each tile's
+    mask/deviation/reduction epilogue runs as one fused Pallas VMEM pass
+    (float-rounding-identical, validated against ``repro.kernels.ref``).
+    """
+    safe_idx, w, nb_means, query_means = _neighbor_inputs(
+        ratings, scores, idx, means, query_means)
+    src = ratings if gather_src is None else gather_src
+    n_items = ratings.shape[1]
+    tiles = []
+    for lo in range(0, n_items, item_block):
+        tile = jax.lax.slice_in_dim(src, lo, min(lo + item_block, n_items),
+                                    axis=1)
+        nbr = tile[safe_idx].astype(jnp.float32)        # (m, k, T)
+        if use_kernel:
+            from repro.kernels.predict import fused_tile_predict
+            tiles.append(fused_tile_predict(nbr, w, nb_means, query_means,
+                                            interpret=interpret))
+        else:
+            tiles.append(_tile_predict(w, nbr, nb_means, query_means))
+    return jnp.concatenate(tiles, axis=1)
+
+
+def predict_items(ratings: jnp.ndarray, scores: jnp.ndarray,
+                  idx: jnp.ndarray, item_ids: jnp.ndarray, *,
+                  means: jnp.ndarray | None = None,
+                  query_means: jnp.ndarray | None = None,
+                  item_block: int = 512,
+                  gather_src: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Predict only the ``(m, M)`` candidate items ``item_ids`` per user —
+    the exact rerank primitive of the two-stage recommend path.
+
+    ``item_ids`` out of ``[0, I)`` (candidate-list padding) are gathered at
+    a clipped position; the caller masks those slots.  Chunked over the
+    candidate axis with the same tile arithmetic as the blocked form, so a
+    full ascending candidate list is bit-identical to it.
+    """
+    safe_idx, w, nb_means, query_means = _neighbor_inputs(
+        ratings, scores, idx, means, query_means)
+    src = ratings if gather_src is None else gather_src
+    n_items = ratings.shape[1]
+    chunks = []
+    for lo in range(0, item_ids.shape[1], item_block):
+        ids = jax.lax.slice_in_dim(item_ids, lo,
+                                   min(lo + item_block, item_ids.shape[1]),
+                                   axis=1)
+        safe_items = jnp.clip(ids, 0, n_items - 1)
+        nbr = src[safe_idx[:, :, None],
+                  safe_items[:, None, :]].astype(jnp.float32)  # (m, k, T)
+        chunks.append(_tile_predict(w, nbr, nb_means, query_means))
+    return jnp.concatenate(chunks, axis=1)
 
 
 def predict_dense(ratings: jnp.ndarray, weight_matrix: jnp.ndarray, *,
@@ -79,3 +194,13 @@ def recommend_topn(pred: jnp.ndarray, seen_mask: jnp.ndarray, n: int):
     masked = jnp.where(seen_mask, -jnp.inf, pred)
     scores, items = jax.lax.top_k(masked, n)
     return scores, items
+
+
+def topn_unseen(pred: jnp.ndarray, seen_mask: jnp.ndarray, n: int):
+    """``recommend_topn`` with sanitised ids: when a user has fewer than
+    ``n`` unseen items, the -inf filler slots surface as item id -1
+    (``lax.top_k`` would otherwise hand back arbitrary *seen* items for
+    them).  Both recommend paths share this so the recommendation contract
+    — never return an already-rated item — holds unconditionally."""
+    scores, items = recommend_topn(pred, seen_mask, n)
+    return scores, jnp.where(scores == -jnp.inf, -1, items)

@@ -22,9 +22,18 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-SIMILARITY_MEASURES = ("jaccard", "cosine", "pcc")
+SIMILARITY_MEASURES = ("jaccard", "cosine", "pcc", "pcc_sig")
 
 _EPS = 1e-8
+
+# significance-weighting shrink horizon: pairs with fewer than PCC_SIG_BETA
+# co-rated items have their pcc scaled by n/β (Herlocker et al.'s n/50 rule).
+# Raw pcc on 2-3 co-rated items is frequently a *perfect* ±1 by chance, so
+# sparse-overlap strangers outrank genuinely similar heavy co-raters — the
+# tie-noise that caps any candidate generator's recall on the pcc ground
+# truth (see ROADMAP).  Shrinking by overlap makes high scores mean
+# "correlated AND well-supported".
+PCC_SIG_BETA = 50.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,10 +120,25 @@ def pcc_from_gram(g: GramTerms, normalize: bool = True) -> jnp.ndarray:
     return pcc
 
 
+def pcc_sig_from_gram(g: GramTerms,
+                      beta: float = PCC_SIG_BETA) -> jnp.ndarray:
+    """Significance-weighted pcc: ``pcc01 · min(n_common, β)/β``.
+
+    The shrink is applied to the [0, 1]-normalised score, so a perfect
+    correlation on 2 co-rated items scores 2/β — well under a moderate
+    correlation on ≥β co-rated items — instead of the tie-noise 1.0 raw
+    pcc gives it.  Scores remain in [0, 1] and reach 1 only for perfectly
+    correlated pairs with at least ``beta`` co-rated items.
+    """
+    shrink = jnp.minimum(g.n_common, beta) / beta
+    return pcc_from_gram(g) * shrink
+
+
 _EPILOGUES = {
     "jaccard": jaccard_from_gram,
     "cosine": cosine_from_gram,
     "pcc": pcc_from_gram,
+    "pcc_sig": pcc_sig_from_gram,
 }
 
 

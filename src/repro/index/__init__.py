@@ -1,15 +1,23 @@
-"""Clustered candidate-generation: sublinear two-stage neighbor search.
+"""Clustered candidate-generation: sublinear two-stage search on both axes.
 
-``ClusteredIndex`` partitions users with blocked k-means (``kmeans``), then
+``ClusteredIndex`` partitions *users* with blocked spill k-means, then
 answers neighbor queries by probing the nearest clusters and *exactly*
 reranking only their members — true similarity scores at sublinear
-candidate-generation cost.  ``CFEngine(neighbor_mode="approx")`` is the
-integrated entry point.
+candidate-generation cost.  ``ItemClusteredIndex`` applies the same
+machinery to *item columns* and powers the two-stage recommend path:
+probe item clusters near the query's neighbor-taste profile, shortlist by
+proxy affinity, exactly rerank with the true neighbor-weighted
+prediction.  ``CFEngine(neighbor_mode="approx")`` /
+``CFEngine(recommend_mode="approx")`` are the integrated entry points;
+both indexes checkpoint through ``state()``/``load_state()``.
 """
 
 from repro.index.clustered import (ClusteredIndex, IndexConfig, QueryStats,
                                    RefoldStats)
+from repro.index.item_index import (ItemClusteredIndex, ItemIndexConfig,
+                                    RecommendStats)
 from repro.index.kmeans import KMeansStats, center_rows, kmeans
 
-__all__ = ["ClusteredIndex", "IndexConfig", "KMeansStats", "QueryStats",
+__all__ = ["ClusteredIndex", "IndexConfig", "ItemClusteredIndex",
+           "ItemIndexConfig", "KMeansStats", "QueryStats", "RecommendStats",
            "RefoldStats", "center_rows", "kmeans"]

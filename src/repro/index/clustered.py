@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import neighbors as nb
+from repro.core import predict as pred_mod
 from repro.core import similarity as sim
 from repro.index.kmeans import (KMeansStats, center_rows, kmeans,
                                 normalize_rows)
@@ -96,6 +97,13 @@ class IndexConfig:
     query_block: int = 256
     use_kernel: Optional[bool] = None     # None → auto: fused kernel on TPU
     interpret: bool = False               # force kernel interpret mode
+    # auto-refit drift guard: when the cumulative fraction of rows whose
+    # spill list changed since the last cold fit crosses this, refold
+    # performs a fresh k-means fit (0 disables).  refold keeps assignments
+    # exactly argmin-consistent, but centroid *positions* drift from a
+    # cold refit under heavy update traffic (the no-cascade rule); this
+    # bounds how far.
+    refit_reassign_frac: float = 0.5
 
 
 @dataclasses.dataclass
@@ -129,6 +137,9 @@ class RefoldStats:
     n_reassigned: int      # rows whose spill list actually changed
     n_full_rows: int       # rows needing a full distance row
     n_certified: int       # rows kept/merged by the cheap certificate
+    reassigned_frac: float = 0.0   # cumulative reassigned/rows since fit
+    refit: bool = False            # this call crossed the drift threshold
+                                   # and performed a cold refit
 
 
 @functools.partial(jax.jit, static_argnames=("features", "spherical"))
@@ -235,14 +246,6 @@ def _user_norms_counts(ratings):
             jnp.sum(ratings > 0, axis=-1).astype(jnp.float32))
 
 
-@jax.jit
-def _int8_exact(ratings):
-    """True iff every rating is an integer in [0, 127] — i.e. an int8 copy
-    round-trips exactly (MovieLens-style 0..5 matrices qualify)."""
-    return jnp.all((ratings >= 0) & (ratings <= 127)
-                   & (ratings == jnp.round(ratings)))
-
-
 @functools.partial(jax.jit, static_argnames=("k", "measure"))
 def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
                    cand_ids, *, k, measure):
@@ -282,7 +285,7 @@ def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
         n = pe("bmn,bn->bm", mc, vq_pos)
         union = jnp.sum(vq_pos, -1)[:, None] + counts[safe_c] - n
         s = n / jnp.maximum(union, eps)
-    else:   # pcc over co-rated items, normalised to [0, 1]
+    else:   # pcc / pcc_sig over co-rated items, normalised to [0, 1]
         n = pe("bmn,bn->bm", mc, vq_pos)
         dot = pe("bmn,bn->bm", rc, vq)
         sum_a = pe("bmn,bn->bm", mc, vq)
@@ -297,6 +300,8 @@ def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
         valid = (n >= 2) & (denom > eps)
         pcc = jnp.clip(cov / jnp.maximum(denom, eps), -1.0, 1.0)
         s = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+        if measure == "pcc_sig":
+            s = s * (jnp.minimum(n, sim.PCC_SIG_BETA) / sim.PCC_SIG_BETA)
 
     invalid = (cand_ids >= n_users) | (cand_ids == q_ids[:, None])
     s = jnp.where(invalid, nb.NEG_INF, s)
@@ -340,36 +345,51 @@ def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure):
     return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
 
 
-class ClusteredIndex:
-    """User-clustering ANN index with exact rerank (see module docstring).
+class _SpillClusterCore:
+    """Axis-agnostic core shared by the user- and item-side indexes.
 
-    The index never owns the rating matrix — the caller (typically
-    :class:`repro.core.facade.CFEngine`) passes ``ratings``/``means`` into
-    every call, so one index serves whatever snapshot the caller holds.
+    Owns the spill-cluster bookkeeping over generic *rows* (user rows for
+    :class:`ClusteredIndex`, item columns for
+    :class:`repro.index.ItemClusteredIndex`): k-means fit + spill
+    assignment, the exact certificate-based refold of assignments and the
+    centroid-mass ledger, the auto-refit drift guard, and checkpointable
+    state.  Subclasses provide the feature map (``_proxy_rows``) and the
+    query semantics.
     """
 
-    def __init__(self, cfg: IndexConfig = IndexConfig()):
+    def __init__(self, cfg):
         if cfg.features not in ("centered", "raw"):
             raise ValueError(f"unknown features {cfg.features!r}; "
                              "want 'centered' or 'raw'")
         if cfg.spill < 1:
             raise ValueError("spill must be ≥ 1")
         self.cfg = cfg
-        self.n_users = 0
+        self.n_rows = 0
         self.n_clusters = 0
         self.n_probe = 0
         self.basis: Optional[jnp.ndarray] = None       # (D, p) or None
-        self.proxies: Optional[jnp.ndarray] = None     # (U, p) unit rows
+        self.proxies: Optional[jnp.ndarray] = None     # (R, p) unit rows
         self.centroids: Optional[jnp.ndarray] = None   # (C, p)
-        self.spill_ids: Optional[np.ndarray] = None    # (U, spill) int32
-        self.spill_dist: Optional[np.ndarray] = None   # (U, spill) float32
+        self.spill_ids: Optional[np.ndarray] = None    # (R, spill) int32
+        self.spill_dist: Optional[np.ndarray] = None   # (R, spill) float32
         self._sums: Optional[np.ndarray] = None        # (C, p) cluster mass
         self._counts: Optional[np.ndarray] = None      # (C,)
-        self._members: List[np.ndarray] = []           # per-cluster user ids
+        self._members: List[np.ndarray] = []           # per-cluster row ids
         self.kmeans_stats: Optional[KMeansStats] = None
-        self.last_query: Optional[QueryStats] = None
         self.last_refold: Optional[RefoldStats] = None
+        self._reassigned_since_fit = 0
         self._gather_cache: Optional[tuple] = None
+
+    def _gather_source(self, ratings):
+        """Rerank gather operand (``predict.make_gather_source``: int8
+        when exact), cached per ratings array — a rating update replaces
+        the array, which invalidates by identity."""
+        if self._gather_cache is not None and \
+                self._gather_cache[0] is ratings:
+            return self._gather_cache[1]
+        src = pred_mod.make_gather_source(ratings)
+        self._gather_cache = (ratings, src)
+        return src
 
     # -- resolution --------------------------------------------------------
     @property
@@ -378,7 +398,7 @@ class ClusteredIndex:
 
     @property
     def assign(self) -> np.ndarray:
-        """Primary (nearest-centroid) cluster per user."""
+        """Primary (nearest-centroid) cluster per row."""
         return self.spill_ids[:, 0]
 
     def _use_kernel(self) -> bool:
@@ -389,6 +409,276 @@ class ClusteredIndex:
     def _distances(self, x, c):
         return centroid_distances(x, c, use_kernel=self._use_kernel(),
                                   interpret=self.cfg.interpret)
+
+    def _proxy_rows(self, ratings, means):
+        raise NotImplementedError
+
+    # -- shared fit tail ---------------------------------------------------
+    def _resolve_sizes(self) -> None:
+        """``n_clusters``/``n_probe`` auto values against ``n_rows``."""
+        c = self.cfg.n_clusters or int(np.ceil(np.sqrt(self.n_rows)))
+        self.n_clusters = max(1, min(c, self.n_rows))
+        self.n_probe = self.cfg.n_probe or max(1, self.n_clusters // 2)
+        self.n_probe = min(self.n_probe, self.n_clusters)
+
+    def _fit_clusters(self) -> None:
+        """k-means over ``self.proxies`` + spill assignment + mass ledger;
+        resets the auto-refit drift counter."""
+        spill = min(self.cfg.spill, self.n_clusters)
+        self.centroids, _, _, self.kmeans_stats = kmeans(
+            self.proxies, self.n_clusters, seed=self.cfg.seed,
+            iters=self.cfg.iters, block_size=self.cfg.kmeans_block,
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        ids, dist = _spill_assign(
+            self.proxies, self.centroids, spill=spill,
+            block_size=min(self.cfg.kmeans_block, self.n_rows),
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        self.spill_ids = np.array(ids)
+        self.spill_dist = np.array(dist)
+        self._fold_mass()
+        self._rebuild_members()
+        self._reassigned_since_fit = 0
+
+    def _fold_mass(self) -> None:
+        p_np = np.asarray(self.proxies)
+        self._sums = np.zeros((self.n_clusters, p_np.shape[1]), np.float32)
+        np.add.at(self._sums, self.assign, p_np)
+        self._counts = np.bincount(self.assign,
+                                   minlength=self.n_clusters).astype(np.int64)
+
+    def _rebuild_members(self) -> None:
+        """Per-cluster member lists from the spill assignment (ascending)."""
+        flat = self.spill_ids.reshape(-1)
+        rows = np.repeat(np.arange(self.n_rows, dtype=np.int32),
+                         self.spill_ids.shape[1])
+        order = np.lexsort((rows, flat))
+        flat, rows = flat[order], rows[order]
+        splits = np.searchsorted(flat, np.arange(1, self.n_clusters))
+        self._members = list(np.split(rows, splits))
+
+    # -- incremental maintenance (shared core) -----------------------------
+    def _refold_rows(self, touched: np.ndarray, p_new_j: jnp.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Fold refreshed proxy rows into the ledger and repair spill
+        assignments exactly (see the module docstring).  ``touched``:
+        sorted unique row ids; ``p_new_j``: their fresh proxy rows.
+        Returns ``(changed_clusters, full_rows, n_reassigned)``.
+
+        The mass ledger invariant — every row's proxy mass sits at its
+        *current primary cluster* — is what keeps repeated refolds exact:
+        removal always subtracts the very value that was added (the stored
+        proxy row), never a recomputation of it.
+        """
+        spill = self.spill_ids.shape[1]
+
+        # 1. refold proxies and centroid mass for the touched rows: remove
+        #    the *stored* proxy at the ledger location (current primary),
+        #    add the fresh proxy at the nearest current centroid; the
+        #    repair below establishes the final canonical spill lists and
+        #    step 4 re-homes any mass whose primary moved
+        p_old = np.asarray(self.proxies[jnp.asarray(touched)])
+        p_new = np.asarray(p_new_j)
+        self.proxies = self.proxies.at[jnp.asarray(touched)].set(p_new_j)
+        a_old = self.assign[touched].copy()
+        np.add.at(self._sums, a_old, -p_old)
+        np.add.at(self._counts, a_old, -1)
+        d_new = np.asarray(self._distances(p_new_j, self.centroids))
+        a_prov = d_new.argmin(axis=1).astype(np.int32)
+        np.add.at(self._sums, a_prov, p_new)
+        np.add.at(self._counts, a_prov, 1)
+
+        # 2. recompute the moved centroids (empty → keep position: nothing
+        #    is assigned there, so it merely stops attracting probes)
+        changed = np.unique(np.concatenate([a_old, a_prov]))
+        cent = np.array(self.centroids)
+        upd = changed[self._counts[changed] > 0]
+        cent[upd] = self._sums[upd] / self._counts[upd, None]
+        self.centroids = jnp.asarray(cent)
+
+        # 3. exact spill repair against the moved centroids.  full rows:
+        #    touched rows (their proxy moved) and rows owning a moved
+        #    cluster (their cached spill distances are stale)
+        old_ids = self.spill_ids.copy()
+        need_full = np.isin(self.spill_ids, changed).any(axis=1)
+        need_full[touched] = True
+
+        # cheap certificate for the rest: merge the moved centroids'
+        # fresh distances into the still-valid cached spill list; clusters
+        # outside (spill ∪ changed) kept their distances and already lost
+        # to the cached spill-th entry, so the merge is exact
+        cb = _bucket(len(changed))
+        cent_ch = cent[np.pad(changed, (0, cb - len(changed)),
+                              constant_values=changed[0])]
+        d_ch = np.asarray(self._distances(self.proxies,
+                                          jnp.asarray(cent_ch))
+                          )[:, :len(changed)]
+        merge_d = np.concatenate([self.spill_dist, d_ch], axis=1)
+        merge_i = np.concatenate(
+            [self.spill_ids,
+             np.broadcast_to(changed[None, :],
+                             (self.n_rows, len(changed)))], axis=1)
+        order = np.lexsort((merge_i, merge_d), axis=1)[:, :spill]
+        keep = ~need_full
+        rows = np.nonzero(keep)[0]
+        self.spill_ids[rows] = np.take_along_axis(
+            merge_i, order, axis=1)[rows]
+        self.spill_dist[rows] = np.take_along_axis(
+            merge_d, order, axis=1)[rows]
+
+        full_rows = np.nonzero(need_full)[0].astype(np.int32)
+        if len(full_rows):
+            fb = _bucket(len(full_rows))
+            rows_pad = np.pad(full_rows, (0, fb - len(full_rows)),
+                              constant_values=full_rows[0])
+            ids, dist = _spill_assign(
+                self.proxies[jnp.asarray(rows_pad)], self.centroids,
+                spill=spill, block_size=fb,
+                use_kernel=self._use_kernel(),
+                interpret=self.cfg.interpret)
+            self.spill_ids[full_rows] = np.asarray(ids)[:len(full_rows)]
+            self.spill_dist[full_rows] = np.asarray(dist)[:len(full_rows)]
+
+        # 4. re-home the mass ledger: any row whose primary cluster moved
+        #    (touched rows relative to their provisional fold, repaired
+        #    rows relative to their old primary) carries its stored proxy
+        #    to the new primary.  The receiving clusters' centroids are
+        #    deliberately not recomputed this round (the no-cascade rule);
+        #    they will be recomputed from this exact ledger the next time
+        #    a refold touches them.
+        ledger = old_ids[:, 0].copy()
+        ledger[touched] = a_prov
+        new_prim = self.spill_ids[:, 0]
+        moved = np.nonzero(ledger != new_prim)[0]
+        if len(moved):
+            pm = np.asarray(self.proxies[jnp.asarray(moved)])
+            np.add.at(self._sums, ledger[moved], -pm)
+            np.add.at(self._counts, ledger[moved], -1)
+            np.add.at(self._sums, new_prim[moved], pm)
+            np.add.at(self._counts, new_prim[moved], 1)
+
+        reassigned = int((self.spill_ids != old_ids).any(axis=1).sum())
+        if reassigned:
+            self._rebuild_members()
+        self._reassigned_since_fit += reassigned
+        return changed, full_rows, reassigned
+
+    def _maybe_refit(self, ratings, means, stats: RefoldStats) -> None:
+        """The drift guard: cold-refit when cumulative reassignment since
+        the last fit crosses ``cfg.refit_reassign_frac`` (0 disables)."""
+        stats.reassigned_frac = self._reassigned_since_fit / max(
+            self.n_rows, 1)
+        thr = self.cfg.refit_reassign_frac
+        if thr and stats.reassigned_frac >= thr:
+            self.fit(ratings, means)
+            stats.refit = True
+
+    # -- diagnostics (shared core) -----------------------------------------
+    def _check_spill_state(self, p_cold: np.ndarray) -> List[str]:
+        """Refold invariants common to both axes: proxies, mass ledger,
+        and spill assignments all equal a cold recomputation."""
+        errs = []
+        if not np.array_equal(p_cold, np.asarray(self.proxies)):
+            errs.append("proxies")
+        cold_counts = np.bincount(self.assign, minlength=self.n_clusters)
+        if not np.array_equal(cold_counts, self._counts):
+            errs.append("mass counts")
+        cold_sums = np.zeros_like(self._sums)
+        np.add.at(cold_sums, self.assign, p_cold)
+        # the ledger is maintained by exact-value add/remove pairs; only
+        # the rounding of the running sums themselves can drift
+        if not np.allclose(cold_sums, self._sums, atol=1e-3):
+            errs.append("mass sums")
+        ids, dist = _spill_assign(
+            jnp.asarray(p_cold), self.centroids,
+            spill=self.spill_ids.shape[1],
+            block_size=min(self.cfg.kmeans_block, self.n_rows),
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+        if not np.array_equal(np.asarray(ids), self.spill_ids):
+            errs.append("spill assignments")
+        if not np.array_equal(np.asarray(dist), self.spill_dist):
+            errs.append("spill distances")
+        return errs
+
+    def member_counts(self) -> np.ndarray:
+        return np.array([len(m) for m in self._members])
+
+    # -- persistence -------------------------------------------------------
+    _STATE_KEYS = ("basis", "centroids", "counts", "meta", "proxies",
+                   "spill_dist", "spill_ids", "sums")
+
+    def state(self) -> dict:
+        """Checkpointable state: a flat dict of arrays, shaped for
+        ``repro.distributed.checkpoint.save``.  ``basis=None`` is encoded
+        as an empty array so the tree structure is fixed."""
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        out = {
+            "basis": (np.zeros((0, 0), np.float32) if self.basis is None
+                      else np.asarray(self.basis)),
+            "centroids": np.asarray(self.centroids),
+            "counts": np.asarray(self._counts),
+            "meta": np.asarray([self.n_rows, self.n_clusters, self.n_probe,
+                                self._reassigned_since_fit], np.int64),
+            "proxies": np.asarray(self.proxies),
+            "spill_dist": self.spill_dist,
+            "spill_ids": self.spill_ids,
+            "sums": self._sums,
+        }
+        out.update(self._extra_state())
+        return out
+
+    @classmethod
+    def state_template(cls) -> dict:
+        """Structure-only tree for ``checkpoint.restore(..., like=...)``
+        (leaf values are ignored by restore; shapes come from the
+        checkpoint shards)."""
+        return {k: 0 for k in cls._STATE_KEYS}
+
+    def load_state(self, tree: dict) -> "_SpillClusterCore":
+        """Restore ``state()`` output (e.g. from ``checkpoint.restore``);
+        the k-means fit is skipped entirely.  Writable copies are taken —
+        restore hands back read-only buffer views."""
+        meta = np.asarray(tree["meta"]).reshape(-1)
+        self.n_rows = int(meta[0])
+        self.n_clusters = int(meta[1])
+        self.n_probe = int(meta[2])
+        self._reassigned_since_fit = int(meta[3])
+        basis = np.asarray(tree["basis"], np.float32)
+        self.basis = jnp.asarray(basis) if basis.size else None
+        self.proxies = jnp.asarray(np.asarray(tree["proxies"], np.float32))
+        self.centroids = jnp.asarray(
+            np.asarray(tree["centroids"], np.float32))
+        self.spill_ids = np.array(tree["spill_ids"], np.int32)
+        self.spill_dist = np.array(tree["spill_dist"], np.float32)
+        self._sums = np.array(tree["sums"], np.float32)
+        self._counts = np.array(tree["counts"], np.int64)
+        self.kmeans_stats = None
+        self._rebuild_members()
+        self._load_extra_state(tree)
+        return self
+
+    def _extra_state(self) -> dict:
+        return {}
+
+    def _load_extra_state(self, tree: dict) -> None:
+        pass
+
+
+class ClusteredIndex(_SpillClusterCore):
+    """User-clustering ANN index with exact rerank (see module docstring).
+
+    The index never owns the rating matrix — the caller (typically
+    :class:`repro.core.facade.CFEngine`) passes ``ratings``/``means`` into
+    every call, so one index serves whatever snapshot the caller holds.
+    """
+
+    def __init__(self, cfg: IndexConfig = IndexConfig()):
+        super().__init__(cfg)
+        self.last_query: Optional[QueryStats] = None
+
+    @property
+    def n_users(self) -> int:
+        return self.n_rows
 
     def _featurize(self, ratings, means):
         return _featurize(ratings, means, features=self.cfg.features)
@@ -402,32 +692,15 @@ class ClusteredIndex:
             return 0
         return max(k, int(np.ceil(self.cfg.rerank_frac * self.n_users)))
 
-    def _gather_source(self, ratings):
-        """Rating matrix as the sparse-rerank gather operand, cached per
-        ratings array: int8 when an int8 copy round-trips exactly
-        (MovieLens 1..5 — the gather is element-count bound and int8 moves
-        ~4× faster on CPU), the f32 matrix otherwise."""
-        if self._gather_cache is not None and \
-                self._gather_cache[0] is ratings:
-            return self._gather_cache[1]
-        src = (ratings.astype(jnp.int8) if bool(_int8_exact(ratings))
-               else ratings)
-        self._gather_cache = (ratings, src)
-        return src
-
     # -- fit ---------------------------------------------------------------
     def fit(self, ratings: jnp.ndarray,
             means: Optional[jnp.ndarray] = None) -> "ClusteredIndex":
         """Project, cluster, and spill-assign the users of ``ratings``."""
         ratings = jnp.asarray(ratings, jnp.float32)
-        self.n_users, n_items = ratings.shape
+        self.n_rows, n_items = ratings.shape
         if means is None:
             means = sim.user_stats(ratings)[2]
-        c = self.cfg.n_clusters or int(np.ceil(np.sqrt(self.n_users)))
-        self.n_clusters = max(1, min(c, self.n_users))
-        self.n_probe = self.cfg.n_probe or max(1, self.n_clusters // 2)
-        self.n_probe = min(self.n_probe, self.n_clusters)
-        spill = min(self.cfg.spill, self.n_clusters)
+        self._resolve_sizes()
 
         z = self._featurize(ratings, means)
         p = min(self.cfg.project_dim, n_items)
@@ -438,37 +711,8 @@ class ClusteredIndex:
             self.basis = None
         self.proxies = (_project(z, self.basis)
                         if self.basis is not None else z)
-
-        self.centroids, _, _, self.kmeans_stats = kmeans(
-            self.proxies, self.n_clusters, seed=self.cfg.seed,
-            iters=self.cfg.iters, block_size=self.cfg.kmeans_block,
-            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
-        ids, dist = _spill_assign(
-            self.proxies, self.centroids, spill=spill,
-            block_size=min(self.cfg.kmeans_block, self.n_users),
-            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
-        self.spill_ids = np.array(ids)
-        self.spill_dist = np.array(dist)
-        self._fold_mass()
-        self._rebuild_members()
+        self._fit_clusters()
         return self
-
-    def _fold_mass(self) -> None:
-        p_np = np.asarray(self.proxies)
-        self._sums = np.zeros((self.n_clusters, p_np.shape[1]), np.float32)
-        np.add.at(self._sums, self.assign, p_np)
-        self._counts = np.bincount(self.assign,
-                                   minlength=self.n_clusters).astype(np.int64)
-
-    def _rebuild_members(self) -> None:
-        """Per-cluster member lists from the spill assignment (ascending)."""
-        flat = self.spill_ids.reshape(-1)
-        users = np.repeat(np.arange(self.n_users, dtype=np.int32),
-                          self.spill_ids.shape[1])
-        order = np.lexsort((users, flat))
-        flat, users = flat[order], users[order]
-        splits = np.searchsorted(flat, np.arange(1, self.n_clusters))
-        self._members = list(np.split(users, splits))
 
     # -- query -------------------------------------------------------------
     def query(self, ratings: jnp.ndarray, means: jnp.ndarray,
@@ -628,11 +872,10 @@ class ClusteredIndex:
         """Fold a rating delta into the index (see module docstring).
 
         ``touched``: sorted unique user ids whose rows changed;
-        ``ratings``/``means`` are the post-update arrays.  The mass ledger
-        invariant — every row's proxy mass sits at its *current primary
-        cluster* — is what keeps repeated refolds exact: removal always
-        subtracts the very value that was added (the stored proxy row),
-        never a recomputation of it.
+        ``ratings``/``means`` are the post-update arrays.  Assignment
+        repair is exact (``_refold_rows``); when cumulative reassignment
+        crosses ``cfg.refit_reassign_frac`` a cold refit re-anchors the
+        drifted centroid positions.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -640,103 +883,16 @@ class ClusteredIndex:
         if touched.size == 0:
             self.last_refold = RefoldStats(0, 0, 0, 0, self.n_users)
             return self.last_refold
-        spill = self.spill_ids.shape[1]
-
-        # 1. refold proxies and centroid mass for the touched rows: remove
-        #    the *stored* proxy at the ledger location (current primary),
-        #    add the fresh proxy at the nearest current centroid; the
-        #    repair below establishes the final canonical spill lists and
-        #    step 4 re-homes any mass whose primary moved
-        p_old = np.asarray(self.proxies[jnp.asarray(touched)])
         p_new_j = self._proxy_rows(ratings[jnp.asarray(touched)],
                                    means[jnp.asarray(touched)])
-        p_new = np.asarray(p_new_j)
-        self.proxies = self.proxies.at[jnp.asarray(touched)].set(p_new_j)
-        a_old = self.assign[touched].copy()
-        np.add.at(self._sums, a_old, -p_old)
-        np.add.at(self._counts, a_old, -1)
-        d_new = np.asarray(self._distances(p_new_j, self.centroids))
-        a_prov = d_new.argmin(axis=1).astype(np.int32)
-        np.add.at(self._sums, a_prov, p_new)
-        np.add.at(self._counts, a_prov, 1)
-
-        # 2. recompute the moved centroids (empty → keep position: nothing
-        #    is assigned there, so it merely stops attracting probes)
-        changed = np.unique(np.concatenate([a_old, a_prov]))
-        cent = np.array(self.centroids)
-        upd = changed[self._counts[changed] > 0]
-        cent[upd] = self._sums[upd] / self._counts[upd, None]
-        self.centroids = jnp.asarray(cent)
-
-        # 3. exact spill repair against the moved centroids.  full rows:
-        #    touched rows (their proxy moved) and rows owning a moved
-        #    cluster (their cached spill distances are stale)
-        old_ids = self.spill_ids.copy()
-        need_full = np.isin(self.spill_ids, changed).any(axis=1)
-        need_full[touched] = True
-
-        # cheap certificate for the rest: merge the moved centroids'
-        # fresh distances into the still-valid cached spill list; clusters
-        # outside (spill ∪ changed) kept their distances and already lost
-        # to the cached spill-th entry, so the merge is exact
-        cb = _bucket(len(changed))
-        cent_ch = cent[np.pad(changed, (0, cb - len(changed)),
-                              constant_values=changed[0])]
-        d_ch = np.asarray(self._distances(self.proxies,
-                                          jnp.asarray(cent_ch))
-                          )[:, :len(changed)]
-        merge_d = np.concatenate([self.spill_dist, d_ch], axis=1)
-        merge_i = np.concatenate(
-            [self.spill_ids,
-             np.broadcast_to(changed[None, :],
-                             (self.n_users, len(changed)))], axis=1)
-        order = np.lexsort((merge_i, merge_d), axis=1)[:, :spill]
-        keep = ~need_full
-        rows = np.nonzero(keep)[0]
-        self.spill_ids[rows] = np.take_along_axis(
-            merge_i, order, axis=1)[rows]
-        self.spill_dist[rows] = np.take_along_axis(
-            merge_d, order, axis=1)[rows]
-
-        full_rows = np.nonzero(need_full)[0].astype(np.int32)
-        if len(full_rows):
-            fb = _bucket(len(full_rows))
-            rows_pad = np.pad(full_rows, (0, fb - len(full_rows)),
-                              constant_values=full_rows[0])
-            ids, dist = _spill_assign(
-                self.proxies[jnp.asarray(rows_pad)], self.centroids,
-                spill=spill, block_size=fb,
-                use_kernel=self._use_kernel(),
-                interpret=self.cfg.interpret)
-            self.spill_ids[full_rows] = np.asarray(ids)[:len(full_rows)]
-            self.spill_dist[full_rows] = np.asarray(dist)[:len(full_rows)]
-
-        # 4. re-home the mass ledger: any row whose primary cluster moved
-        #    (touched rows relative to their provisional fold, repaired
-        #    rows relative to their old primary) carries its stored proxy
-        #    to the new primary.  The receiving clusters' centroids are
-        #    deliberately not recomputed this round (the no-cascade rule);
-        #    they will be recomputed from this exact ledger the next time
-        #    a refold touches them.
-        ledger = old_ids[:, 0].copy()
-        ledger[touched] = a_prov
-        new_prim = self.spill_ids[:, 0]
-        moved = np.nonzero(ledger != new_prim)[0]
-        if len(moved):
-            pm = np.asarray(self.proxies[jnp.asarray(moved)])
-            np.add.at(self._sums, ledger[moved], -pm)
-            np.add.at(self._counts, ledger[moved], -1)
-            np.add.at(self._sums, new_prim[moved], pm)
-            np.add.at(self._counts, new_prim[moved], 1)
-
-        reassigned = int((self.spill_ids != old_ids).any(axis=1).sum())
-        if reassigned:
-            self._rebuild_members()
-        self.last_refold = RefoldStats(
+        changed, full_rows, reassigned = self._refold_rows(touched, p_new_j)
+        stats = RefoldStats(
             n_touched=int(touched.size), n_changed_clusters=len(changed),
             n_reassigned=reassigned, n_full_rows=len(full_rows),
             n_certified=self.n_users - len(full_rows))
-        return self.last_refold
+        self._maybe_refit(ratings, means, stats)
+        self.last_refold = stats
+        return stats
 
     # -- diagnostics -------------------------------------------------------
     def check_consistent(self, ratings: jnp.ndarray,
@@ -746,32 +902,9 @@ class ClusteredIndex:
         ledger equals a cold fold by primary cluster (the refold
         invariants); raises on mismatch."""
         p_cold = np.asarray(self._proxy_rows(ratings, means))
-        errs = []
-        if not np.array_equal(p_cold, np.asarray(self.proxies)):
-            errs.append("proxies")
-        cold_counts = np.bincount(self.assign, minlength=self.n_clusters)
-        if not np.array_equal(cold_counts, self._counts):
-            errs.append("mass counts")
-        cold_sums = np.zeros_like(self._sums)
-        np.add.at(cold_sums, self.assign, p_cold)
-        # the ledger is maintained by exact-value add/remove pairs; only
-        # the rounding of the running sums themselves can drift
-        if not np.allclose(cold_sums, self._sums, atol=1e-3):
-            errs.append("mass sums")
-        ids, dist = _spill_assign(
-            jnp.asarray(p_cold), self.centroids,
-            spill=self.spill_ids.shape[1],
-            block_size=min(self.cfg.kmeans_block, self.n_users),
-            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
-        if not np.array_equal(np.asarray(ids), self.spill_ids):
-            errs.append("spill assignments")
-        if not np.array_equal(np.asarray(dist), self.spill_dist):
-            errs.append("spill distances")
+        errs = self._check_spill_state(p_cold)
         if errs:
             raise RuntimeError(
                 "index diverged from a cold reassignment: "
                 f"{', '.join(errs)}")
         return True
-
-    def member_counts(self) -> np.ndarray:
-        return np.array([len(m) for m in self._members])

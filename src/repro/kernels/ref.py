@@ -45,6 +45,24 @@ def centroid_distances_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(d, 0.0)
 
 
+# -- fused tile predict -------------------------------------------------------
+
+def tile_predict_ref(nbr: jnp.ndarray, w: jnp.ndarray, nb_means: jnp.ndarray,
+                     q_means: jnp.ndarray) -> jnp.ndarray:
+    """(m, k, T) gathered neighbor ratings, (m, k) weights/means, (m,) query
+    means → (m, T) clipped predictions.  Oracle for
+    ``repro.kernels.predict.fused_tile_predict`` (and the same arithmetic as
+    one item tile of ``repro.core.predict``)."""
+    nbr = nbr.astype(jnp.float32)
+    mask = (nbr > 0).astype(jnp.float32)
+    dev = (nbr - nb_means[:, :, None]) * mask
+    num = jnp.einsum("mk,mkt->mt", w, dev)
+    den = jnp.einsum("mk,mkt->mt", w, mask)
+    pred = q_means[:, None] + num / jnp.maximum(den, 1e-8)
+    pred = jnp.where(den > 1e-8, pred, q_means[:, None])
+    return jnp.clip(pred, 1.0, 5.0)
+
+
 # -- attention ----------------------------------------------------------------
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -27,9 +27,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.core.similarity import PCC_SIG_BETA
 
 _EPS = 1e-8
 MEASURES = ("jaccard", "cosine", "pcc")
+ALL_MEASURES = MEASURES + ("pcc_sig",)    # "all" keeps the original 3-tuple
 
 # default MXU-aligned tile sizes (v5e: 128×128 MXU, 8×128 VREG lanes)
 BM, BN, BK = 256, 256, 512
@@ -80,14 +82,18 @@ def _sim_kernel(ra_ref, rb_ref, *refs, n_k: int, measures: Sequence[str]):
             elif measure == "cosine":
                 denom = jnp.sqrt(acc_na[...] * acc_nb[...])
                 ref[...] = acc_dot[...] / jnp.maximum(denom, _EPS)
-            else:  # pcc, normalised to [0, 1] (paper convention)
+            else:  # pcc / pcc_sig, normalised to [0, 1] (paper convention)
                 cov = n * acc_dot[...] - acc_sa[...] * acc_sb[...]
                 var_a = jnp.maximum(n * acc_qa[...] - acc_sa[...] ** 2, 0.0)
                 var_b = jnp.maximum(n * acc_qb[...] - acc_sb[...] ** 2, 0.0)
                 denom = jnp.sqrt(var_a * var_b)
                 valid = (n >= 2) & (denom > _EPS)
                 pcc = jnp.clip(cov / jnp.maximum(denom, _EPS), -1.0, 1.0)
-                ref[...] = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+                pcc01 = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+                if measure == "pcc_sig":
+                    pcc01 = pcc01 * (jnp.minimum(n, PCC_SIG_BETA)
+                                     / PCC_SIG_BETA)
+                ref[...] = pcc01
 
 
 def _pad_to(x, mult, axis):
@@ -109,6 +115,9 @@ def fused_similarity(ra: jnp.ndarray, rb: jnp.ndarray, *,
     ``ra``: (m, D), ``rb``: (n, D); returns (m, n) for a single measure or a
     3-tuple (jaccard, cosine, pcc) for ``measure='all'``.
     """
+    if measure != "all" and measure not in ALL_MEASURES:
+        raise ValueError(f"unknown measure {measure!r}; want one of "
+                         f"{ALL_MEASURES} or 'all'")
     measures = MEASURES if measure == "all" else (measure,)
     m, d = ra.shape
     n = rb.shape[0]

@@ -1,6 +1,8 @@
 """Serving launcher: fit the CF model and serve batched recommendations.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 128
+    PYTHONPATH=src python -m repro.launch.serve --engine facade \\
+        --recommend-mode approx          # two-stage item-index serving
 """
 
 from __future__ import annotations
@@ -23,15 +25,31 @@ def main():
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--topn", type=int, default=10)
+    ap.add_argument("--engine", choices=("legacy", "facade"),
+                    default="legacy")
+    ap.add_argument("--measure", default="pcc",
+                    choices=("jaccard", "cosine", "pcc", "pcc_sig"))
+    ap.add_argument("--recommend-mode", choices=("exact", "approx"),
+                    default="exact",
+                    help="facade engine only: approx serves through the "
+                         "two-stage item index")
     args = ap.parse_args()
 
     train, _, _ = load_ml1m_synthetic(n_users=args.users,
                                       n_items=args.items)
     tr = jnp.asarray(train)
-    cf = UserCF(CFConfig(measure="pcc", top_k=40, block_size=256))
-    cf.fit(tr)
-    server = BatchingServer(cf, tr, max_batch=args.max_batch,
-                            topn=args.topn)
+    if args.engine == "facade":
+        from repro.core import CFEngine
+        engine = CFEngine(tr, measure=args.measure, k=40, block_size=256,
+                          recommend_mode=args.recommend_mode).fit()
+        server = BatchingServer(engine, max_batch=args.max_batch,
+                                topn=args.topn)
+    else:
+        cf = UserCF(CFConfig(measure=args.measure, top_k=40,
+                             block_size=256))
+        cf.fit(tr)
+        server = BatchingServer(cf, tr, max_batch=args.max_batch,
+                                topn=args.topn)
     server.start()
     t0 = time.perf_counter()
     futs = [server.submit(int(u)) for u in

@@ -11,6 +11,12 @@ facade owns the rating matrix and neighbor cache, so ``update_ratings``
 between batches is picked up by the very next batch because the model
 arrays are passed per call, not baked into the executable) or the legacy
 ``UserCF`` + ratings pair.
+
+Prediction streams item tiles (``predict_from_neighbors_blocked``) so the
+batch predictor's memory stays O(batch·k·item_block) however wide the item
+catalog grows.  An engine built with ``recommend_mode="approx"`` is served
+through its two-stage item-index path instead — candidate generation +
+exact rerank, the end-to-end sublinear configuration.
 """
 
 from __future__ import annotations
@@ -28,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.predict import predict_from_neighbors, recommend_topn
+from repro.core.predict import predict_from_neighbors_blocked, topn_unseen
+
+_ITEM_BLOCK = 512      # predict tile width: batch·k·tile intermediates
 
 
 @dataclasses.dataclass
@@ -41,21 +49,29 @@ class Recommendation:
 
 @functools.partial(jax.jit, static_argnames=("topn",))
 def _predict_users(users, ratings, scores, idx, means, *, topn):
-    pred = predict_from_neighbors(ratings, scores[users], idx[users],
-                                  means=means, query_means=means[users])
+    pred = predict_from_neighbors_blocked(
+        ratings, scores[users], idx[users], means=means,
+        query_means=means[users], item_block=_ITEM_BLOCK)
     seen = ratings[users] > 0
-    return recommend_topn(pred, seen, topn)
+    return topn_unseen(pred, seen, topn)
 
 
 class BatchingServer:
     def __init__(self, cf_model, ratings=None, *, max_batch: int = 16,
                  max_wait_ms: float = 20.0, topn: int = 10):
+        self._approx_engine = None
         if ratings is None:
             # CFEngine facade: snapshot() hands a consistent model view even
             # while update_ratings runs on another thread
             if getattr(cf_model, "scores", None) is None:
                 raise ValueError("fit the engine first")
             self._snapshot = cf_model.snapshot
+            if getattr(cf_model, "recommend_mode", "exact") == "approx":
+                # two-stage serving: candidate items from the item index,
+                # exact rerank — updates land between batches (the batcher
+                # is the only recommend caller, so it always sees a fully
+                # refolded index)
+                self._approx_engine = cf_model
         else:
             # legacy UserCF + external ratings (static model)
             if cf_model.state is None:
@@ -80,6 +96,9 @@ class BatchingServer:
         self._run_padded(jnp.zeros((self.max_batch,), jnp.int32))
 
     def _run_padded(self, users):
+        if self._approx_engine is not None:
+            return self._approx_engine.recommend(np.asarray(users),
+                                                 n=self.topn)
         ratings, scores, idx, means = self._snapshot()
         return _predict_users(users, ratings, scores, idx, means,
                               topn=self.topn)

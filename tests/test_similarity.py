@@ -33,6 +33,9 @@ def brute_force(ra, rb, measure):
                 if sa * sb <= 1e-12:
                     continue
                 out[i, j] = (np.corrcoef(av, bv)[0, 1] + 1) / 2
+                if measure == "pcc_sig":
+                    out[i, j] *= (min(both.sum(), sim.PCC_SIG_BETA)
+                                  / sim.PCC_SIG_BETA)
     return out
 
 
@@ -74,6 +77,29 @@ def test_self_similarity(seed):
     np.testing.assert_allclose(np.diag(np.asarray(jac))[0], 1.0, atol=1e-5)
     np.testing.assert_allclose(np.diag(np.asarray(cos))[0], 1.0, atol=1e-5)
     np.testing.assert_allclose(np.diag(np.asarray(pcc))[0], 1.0, atol=1e-5)
+
+
+def test_pcc_sig_kills_tiny_overlap_tie_noise():
+    """The tie-noise bugfix: a chance-perfect correlation on 2 co-rated
+    items must rank *below* a strong correlation on a wide overlap."""
+    d = 40
+    q = np.zeros((1, d), np.float32)
+    q[0, :32] = np.tile([1, 2, 4, 5], 8)
+    stranger = np.zeros((1, d), np.float32)
+    stranger[0, :2] = [1, 2]             # 2 co-rated, perfect pcc by chance
+    friend = np.zeros((1, d), np.float32)
+    friend[0, :32] = q[0, :32]
+    friend[0, 4] = 5.0                   # wide overlap, near-perfect pcc
+    cands = jnp.asarray(np.vstack([stranger, friend]))
+    raw = np.asarray(sim.pairwise_similarity(jnp.asarray(q), cands, "pcc"))
+    shr = np.asarray(sim.pairwise_similarity(jnp.asarray(q), cands,
+                                             "pcc_sig"))
+    assert raw[0, 0] == 1.0              # the tie-noise: stranger wins raw
+    assert raw[0, 0] >= raw[0, 1]
+    assert shr[0, 1] > shr[0, 0]         # significance weighting flips it
+    # shrink is exactly min(n, β)/β on top of raw pcc
+    np.testing.assert_allclose(shr[0, 0], raw[0, 0] * 2 / sim.PCC_SIG_BETA,
+                               rtol=1e-6)
 
 
 def test_pcc_degenerate_pairs(rng):
