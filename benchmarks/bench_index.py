@@ -31,9 +31,19 @@ DEFAULT_SIZES = (2048, 8192, 32768)
 # per-size overrides: past ~10⁴ users the shortlist budget shrinks — the
 # neighbor lists concentrate, so a thinner exact rerank stays accurate
 # while the candidate-generation advantage keeps growing; a wider proxy
-# basis buys back the shortlist fidelity the thinner budget costs
-RERANK_FRAC = {32768: 0.03}
-PROJECT_DIM = {32768: 384}
+# basis buys back the shortlist fidelity the thinner budget costs (at
+# U=32768, dim 512 at a 2% budget measures *higher* recall than the old
+# dim-384/3% point while reranking a third less)
+RERANK_FRAC = {32768: 0.02}
+PROJECT_DIM = {32768: 512}
+
+# regression floors for the CI smoke (--quick): recall below this fails
+QUICK_RECALL_FLOOR = 0.90
+
+# sizes at which both rerank modes are timed (the grouped union-Gram
+# path is the accelerator formulation; on CPU it exists as the OpenBLAS
+# twin and is timed for the mode comparison at the cheaper sizes)
+DUAL_MODE_SIZES = (2048, 8192)
 
 
 def write_json(path: str, rows: list) -> None:
@@ -86,11 +96,12 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
         t0 = time.perf_counter()
         _, got_i = index.query(ratings, means, k=k, measure=measure)
         query_s = time.perf_counter() - t0
+        stats = index.last_query
 
         recall = _recall(exact_i, np.asarray(got_i))
-        frac = index.last_query.rerank_fraction
+        frac = stats.rerank_fraction
         speedup = exact_s / (fit_s + query_s)
-        rows.append({
+        row = {
             "name": f"index_{measure}_U{n_users}",
             "us_per_call": query_s / n_users * 1e6,   # per-user query cost
             "n_users": n_users,
@@ -104,9 +115,30 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
             "fit_query_speedup": round(speedup, 3),
             "recall_at_k": round(recall, 4),
             "rerank_fraction": round(frac, 4),
-        })
+            # per-stage wall time: the rerank-stage split makes kernel /
+            # batching wins directly visible across PRs
+            "rerank_mode": stats.rerank_mode,
+            "shortlist_s": round(stats.seconds_shortlist, 3),
+            "rerank_s": round(stats.seconds_rerank, 3),
+        }
+        if n_users in DUAL_MODE_SIZES:
+            # time the other rerank formulation on the same fitted index
+            other = "grouped" if stats.rerank_mode == "gather" else "gather"
+            index_o = ClusteredIndex(IndexConfig(
+                **{**kwargs, "rerank_mode": other}))
+            index_o.fit(ratings, means)
+            t0 = time.perf_counter()
+            _, got_o = index_o.query(ratings, means, k=k, measure=measure)
+            row[f"query_s_{other}"] = round(time.perf_counter() - t0, 3)
+            row[f"rerank_s_{other}"] = round(
+                index_o.last_query.seconds_rerank, 3)
+            row["modes_agree"] = bool(
+                np.array_equal(np.asarray(got_i), np.asarray(got_o)))
+        rows.append(row)
         print(f"U={n_users}: exact={exact_s:.1f}s index={fit_s:.1f}+"
-              f"{query_s:.1f}s speedup={speedup:.2f}x "
+              f"{query_s:.1f}s ({stats.rerank_mode}: short="
+              f"{stats.seconds_shortlist:.1f} rerank="
+              f"{stats.seconds_rerank:.1f}) speedup={speedup:.2f}x "
               f"recall@{k}={recall:.4f} rerank={frac:.3f}")
     return rows
 
@@ -126,6 +158,10 @@ def main():
     if args.quick:
         rows = run(sizes=(256,), k=min(args.k, 10), measure=args.measure,
                    n_items=128)
+        for r in rows:   # fail loudly on smoke recall regressions
+            assert r["recall_at_k"] >= QUICK_RECALL_FLOOR, \
+                (f"{r['name']}: recall {r['recall_at_k']} below pinned "
+                 f"floor {QUICK_RECALL_FLOOR}")
     else:
         sizes = (tuple(int(s) for s in args.sizes.split(","))
                  if args.sizes else DEFAULT_SIZES)

@@ -1,22 +1,36 @@
-"""Kernel microbenchmarks: fused-Gram similarity vs unfused XLA reference.
+"""Kernel microbenchmarks: fused kernels vs their jnp / XLA references.
 
 On CPU these numbers are indicative only (no MXU); the structural claim —
-the fused kernel performs 6 Gram products for ~1 pass of operand reads —
-is checked via the arithmetic-intensity ratio, and wall time is reported
-for the XLA paths (the Pallas kernel itself runs interpret-mode on CPU and
-is timed at a reduced shape).
+each fused kernel performs its Gram products for ~1 pass of operand reads
+— is checked via the arithmetic-intensity ratio, and wall time is
+reported for the XLA paths (the Pallas kernels run interpret-mode on CPU
+and are timed at reduced shapes).
+
+The rerank-kernel smoke additionally *verifies* the kernels: the fused
+co-rated Gram rerank (``kernels/rerank.py``) and its OpenBLAS host twin
+are scored against the jnp oracle on an integer rating block, and the
+resulting top-k neighbor sets must match the oracle's exactly — a recall
+floor of 1.0, pinned so CI fails loudly on any regression.  Results are
+written as a JSON artifact (``--json-path``) alongside the other
+``BENCH_*`` files.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ref import similarity_ref
+from repro.kernels import ref
+from repro.kernels.rerank import fused_rerank_scores, rerank_scores_host
 from repro.kernels.similarity import fused_similarity
+
+# the smoke's pinned floor: kernel/host top-k sets vs the jnp oracle
+RERANK_RECALL_FLOOR = 1.0
 
 
 def _time(f, *args, reps=5):
@@ -27,31 +41,102 @@ def _time(f, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6    # µs
 
 
+def _topk_sets(scores: np.ndarray, k: int) -> list:
+    return [set(np.argsort(-row, kind="stable")[:k].tolist())
+            for row in scores]
+
+
+def _rerank_recall(got: np.ndarray, want: np.ndarray, k: int) -> float:
+    hits = total = 0
+    for g, w in zip(_topk_sets(got, k), _topk_sets(want, k)):
+        hits += len(g & w)
+        total += len(w)
+    return hits / max(total, 1)
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
     for m, d in ((512, 1024), (1024, 2048)):
         ra = jnp.asarray((rng.integers(1, 6, (m, d))
                           * (rng.random((m, d)) < 0.1)).astype(np.float32))
-        xla_all = jax.jit(lambda a, b: similarity_ref(a, b, "all"))
+        xla_all = jax.jit(lambda a, b: ref.similarity_ref(a, b, "all"))
         us_ref = _time(xla_all, ra, ra)
-        rows.append((f"xla_unfused_all3_{m}x{d}", us_ref,
-                     f"flops={12 * m * m * d:.0f}"))
+        rows.append({"name": f"xla_unfused_all3_{m}x{d}",
+                     "us_per_call": us_ref,
+                     "derived": f"flops={12 * m * m * d:.0f}"})
     # pallas interpret at reduced shape (python-loop execution)
     ra = jnp.asarray((rng.integers(1, 6, (128, 256))
                       * (rng.random((128, 256)) < 0.2)).astype(np.float32))
     us_pal = _time(lambda a: fused_similarity(
         a, a, measure="all", bm=64, bn=64, bk=128, interpret=True), ra,
         reps=2)
-    rows.append(("pallas_interpret_all3_128x256", us_pal,
-                 "correctness-mode timing (no Mosaic on CPU)"))
+    rows.append({"name": "pallas_interpret_all3_128x256",
+                 "us_per_call": us_pal,
+                 "derived": "correctness-mode timing (no Mosaic on CPU)"})
+    rows += run_rerank_smoke(rng)
+    return rows
+
+
+def run_rerank_smoke(rng, g: int = 48, kc: int = 160, j: int = 256,
+                     k: int = 10):
+    """Verify + time the co-rated Gram rerank kernel and its host twin.
+
+    Integer ratings make every Gram sum an exact f32 integer, so the
+    kernel (interpret mode), the OpenBLAS twin, and the jnp oracle must
+    produce *identical* top-k neighbor sets — recall 1.0, pinned.
+    """
+    vq = (rng.integers(1, 6, (g, j))
+          * (rng.random((g, j)) < 0.3)).astype(np.float32)
+    rc = (rng.integers(1, 6, (kc, j))
+          * (rng.random((kc, j)) < 0.3)).astype(np.float32)
+    norms = np.sqrt((rc * rc).sum(1)).astype(np.float32)
+    counts = (rc > 0).sum(1).astype(np.float32)
+    args_j = (jnp.asarray(vq), jnp.asarray(rc.astype(np.int8)),
+              jnp.asarray(norms), jnp.asarray(counts))
+    oracle = jax.jit(ref.rerank_scores_ref, static_argnames=("measure",))
+    rows = []
+    for measure in ("cosine", "jaccard", "pcc_sig"):
+        want = np.asarray(oracle(jnp.asarray(vq), jnp.asarray(rc),
+                                 jnp.asarray(norms), jnp.asarray(counts),
+                                 measure=measure))
+        us_k = _time(lambda: fused_rerank_scores(
+            *args_j, measure=measure, bm=16, bn=64, bk=128,
+            interpret=True), reps=2)
+        got_k = np.asarray(fused_rerank_scores(
+            *args_j, measure=measure, bm=16, bn=64, bk=128,
+            interpret=True))
+        us_h = _time(lambda: rerank_scores_host(
+            vq, rc, norms, counts, measure=measure), reps=5)
+        got_h = rerank_scores_host(vq, rc, norms, counts, measure=measure)
+        rec_k = _rerank_recall(got_k, want, k)
+        rec_h = _rerank_recall(got_h, want, k)
+        rows.append({"name": f"rerank_kernel_{measure}_{g}x{kc}x{j}",
+                     "us_per_call": us_k,
+                     "recall_vs_oracle": rec_k,
+                     "derived": "interpret-mode (no Mosaic on CPU)"})
+        rows.append({"name": f"rerank_host_{measure}_{g}x{kc}x{j}",
+                     "us_per_call": us_h,
+                     "recall_vs_oracle": rec_h,
+                     "derived": "OpenBLAS host twin"})
+        for tag, rec in (("kernel", rec_k), ("host", rec_h)):
+            assert rec >= RERANK_RECALL_FLOOR, \
+                (f"rerank {tag} smoke ({measure}): recall {rec} below "
+                 f"pinned floor {RERANK_RECALL_FLOOR}")
     return rows
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-path", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    rows = run()
     print("name,us_per_call,derived")
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r.get('derived', '')}")
+    with open(args.json_path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json_path} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,28 @@
 """Paper Figs. 3–6: MAE / Precision / Recall / F-Score vs top-N neighbors,
-for Jaccard / Cosine / PCC, on the synthetic MovieLens-1M surrogate."""
+for Jaccard / Cosine / PCC, on the synthetic MovieLens-1M surrogate —
+plus the ``pcc_sig`` shrink-horizon (β) sweep.
+
+The β sweep measures what the significance horizon buys on the surrogate:
+for each β it computes the exact ``pcc_sig`` neighbor cache and the
+clustered index's two-stage answer under the *same* β (the engine-level
+``pcc_sig_beta`` reaches every scoring path), and records retrieval
+recall@k plus the prediction MAE of the exact cache.  Results land in a
+JSON artifact next to the other ``BENCH_*`` files.
+"""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import CFConfig, UserCF
 from repro.data import load_ml1m_synthetic
 
 TOPNS = (5, 10, 20, 40, 80)
+BETAS = (5.0, 20.0, 50.0, 100.0, 400.0)
 
 
 def run(n_users: int = 1536, n_items: int = 1024, seed: int = 0):
@@ -33,12 +45,74 @@ def run(n_users: int = 1536, n_items: int = 1024, seed: int = 0):
     return rows
 
 
+def beta_sweep(n_users: int = 2048, n_items: int = 1024, k: int = 20,
+               seed: int = 0, betas=BETAS):
+    """Retrieval quality of ``pcc_sig`` vs the shrink horizon β.
+
+    Returns rows with the exact-cache MAE and the clustered index's
+    recall@k against the exact top-k under the same β.
+    """
+    from repro.core import CFEngine
+    from repro.core import metrics as met
+    from repro.index import IndexConfig
+
+    train, test, _ = load_ml1m_synthetic(n_users=n_users, n_items=n_items,
+                                         seed=seed)
+    tr, te = jnp.asarray(train), jnp.asarray(test)
+    rows = []
+    for beta in betas:
+        t0 = time.perf_counter()
+        ex = CFEngine(tr, measure="pcc_sig", k=k, pcc_sig_beta=beta).fit()
+        mae = float(met.mae(ex.predict(), te))
+        ap = CFEngine(tr, measure="pcc_sig", k=k, pcc_sig_beta=beta,
+                      neighbor_mode="approx",
+                      index_cfg=IndexConfig(seed=seed)).fit()
+        ex_i = np.asarray(ex.idx)
+        ap_i = np.asarray(ap.idx)
+        hits = total = 0
+        for row in range(n_users):
+            ref = set(int(j) for j in ex_i[row] if j >= 0)
+            if ref:
+                hits += len(ref & set(int(j) for j in ap_i[row]))
+                total += len(ref)
+        rows.append({
+            "name": f"pcc_sig_beta{beta:g}_U{n_users}",
+            "beta": beta,
+            "n_users": n_users,
+            "k": k,
+            "us_per_call": (time.perf_counter() - t0) / n_users * 1e6,
+            "mae": round(mae, 4),
+            "recall_at_k": round(hits / max(total, 1), 4),
+            "rerank_fraction": round(ap.index.last_query.rerank_fraction,
+                                     4),
+        })
+        print(f"beta={beta:g}: mae={mae:.4f} "
+              f"recall@{k}={rows[-1]['recall_at_k']:.4f}")
+    return rows
+
+
 def main():
-    print("measure,top_n,mae,precision,recall,f1,seconds")
-    for r in run():
-        print(f"{r['measure']},{r['top_n']},{r['mae']:.4f},"
-              f"{r['precision']:.4f},{r['recall']:.4f},{r['f1']:.4f},"
-              f"{r['seconds']:.2f}")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--beta-sweep", action="store_true",
+                    help="run the pcc_sig shrink-horizon sweep only")
+    ap.add_argument("--json-path", default="BENCH_topn.json")
+    args = ap.parse_args()
+
+    rows = []
+    if args.beta_sweep:
+        rows = beta_sweep()
+    else:
+        print("measure,top_n,mae,precision,recall,f1,seconds")
+        for r in run():
+            rows.append(r)
+            print(f"{r['measure']},{r['top_n']},{r['mae']:.4f},"
+                  f"{r['precision']:.4f},{r['recall']:.4f},{r['f1']:.4f},"
+                  f"{r['seconds']:.2f}")
+        rows += beta_sweep()
+    with open(args.json_path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json_path} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -34,17 +34,17 @@ from repro.core.similarity import user_means
 
 
 def _block_topk_local(q_block, cand_block, k, measure, q_offset, cand_offset,
-                      n_valid_cand, block_size):
+                      n_valid_cand, block_size, beta=None):
     """block_topk against one candidate shard with global-id bookkeeping."""
     return nb.block_topk(
         q_block, cand_block, k, measure=measure, q_offset=q_offset,
         cand_offset=cand_offset,
-        block_size=min(block_size, cand_block.shape[0]))
+        block_size=min(block_size, cand_block.shape[0]), beta=beta)
 
 
 def sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
                  measure: str = "pcc", axis: str = "data",
-                 block_size: int = 1024,
+                 block_size: int = 1024, beta: float | None = None,
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Paper-faithful engine: shard queries over ``axis``, replicate candidates.
 
@@ -60,7 +60,7 @@ def sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
     def per_shard(q_block, all_ratings):
         i = jax.lax.axis_index(axis)
         return _block_topk_local(q_block, all_ratings, k, measure,
-                                 i * shard, 0, n_users, block_size)
+                                 i * shard, 0, n_users, block_size, beta)
 
     f = compat.shard_map(per_shard, mesh=mesh,
                       in_specs=(P(axis, None), P(None, None)),
@@ -71,7 +71,7 @@ def sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
 
 def ring_sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
                       measure: str = "pcc", axis: str = "data",
-                      block_size: int = 1024,
+                      block_size: int = 1024, beta: float | None = None,
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Systolic engine: candidates rotate around the ring; O(U/P) memory/device.
 
@@ -96,7 +96,7 @@ def ring_sharded_topk(ratings: jnp.ndarray, k: int, mesh: Mesh, *,
             # candidate shard currently held started at device (i - step) % P
             src = jnp.mod(i - step, axis_size)
             s, ids = _block_topk_local(q_block, cand, k, measure, q_offset,
-                                       src * shard, shard, block_size)
+                                       src * shard, shard, block_size, beta)
             best_s, best_i = nb.merge_topk(best_s, best_i, s, ids, k)
             cand = jax.lax.ppermute(cand, axis, perm)
             return (best_s, best_i, cand), ()

@@ -93,8 +93,8 @@ class UpdateStats:
     oracle_ok: Optional[bool] = None    # set when oracle_check=True
 
 
-@functools.partial(jax.jit, static_argnames=("measure",))
-def _cross_scores(ratings, cand_ids, *, measure):
+@functools.partial(jax.jit, static_argnames=("measure", "beta"))
+def _cross_scores(ratings, cand_ids, *, measure, beta=None):
     """Similarity of every user against the (padded) touched set.
 
     ``cand_ids``: (S,) global user ids, padded with out-of-range ids (≥ U).
@@ -106,7 +106,7 @@ def _cross_scores(ratings, cand_ids, *, measure):
     """
     n_users = ratings.shape[0]
     cand = ratings[jnp.clip(cand_ids, 0, n_users - 1)]
-    s = sim.pairwise_similarity(ratings, cand, measure=measure)
+    s = sim.pairwise_similarity(ratings, cand, measure=measure, beta=beta)
     invalid = (cand_ids[None, :] < 0) | (cand_ids[None, :] >= n_users) | \
               (cand_ids[None, :] == jnp.arange(n_users)[:, None])
     s = jnp.where(invalid, nb.NEG_INF, s)
@@ -143,15 +143,14 @@ def _repair_rows(scores, idx, cross_s, cross_i, touch_ids, *, k):
     return ms, mi, ok.all(axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "measure", "block_size"))
-def _rows_topk(ratings, q_ids, *, k, measure, block_size):
-    """Full recompute for a gathered (padded) set of query rows.
-
-    """
+@functools.partial(jax.jit, static_argnames=("k", "measure", "block_size",
+                                             "beta"))
+def _rows_topk(ratings, q_ids, *, k, measure, block_size, beta=None):
+    """Full recompute for a gathered (padded) set of query rows."""
     n_users = ratings.shape[0]
     q = ratings[jnp.clip(q_ids, 0, n_users - 1)]
     return nb.block_topk(q, ratings, k, measure=measure, q_ids=q_ids,
-                         block_size=min(block_size, n_users))
+                         block_size=min(block_size, n_users), beta=beta)
 
 
 _user_stats = jax.jit(sim.user_stats)
@@ -219,7 +218,8 @@ class CFEngine:
                  axis: str = "data", block_size: int = 1024,
                  neighbor_mode: str = "exact", index_cfg=None,
                  recommend_mode: str = "exact", item_index_cfg=None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 pcc_sig_beta: Optional[float] = None):
         if measure not in sim.SIMILARITY_MEASURES:
             raise ValueError(f"unknown measure {measure!r}; want one of "
                              f"{sim.SIMILARITY_MEASURES}")
@@ -244,6 +244,9 @@ class CFEngine:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+        # pcc_sig shrink horizon: one engine-level setting reaching every
+        # scoring path (exact backends, fused kernel, index rerank)
+        self.pcc_sig_beta = sim.resolve_beta(pcc_sig_beta)
 
         self.neighbor_mode = neighbor_mode
         self.index = None
@@ -253,7 +256,8 @@ class CFEngine:
                 index_cfg = IndexConfig(
                     features="centered" if measure in ("pcc", "pcc_sig")
                     else "raw")
-            self.index = ClusteredIndex(index_cfg)
+            self.index = ClusteredIndex(index_cfg, mesh=self.mesh,
+                                        mesh_axis=self.axis)
 
         self.recommend_mode = recommend_mode
         self.item_index = None
@@ -261,7 +265,9 @@ class CFEngine:
             from repro.index import ItemClusteredIndex, ItemIndexConfig
             if item_index_cfg is None:
                 item_index_cfg = ItemIndexConfig()
-            self.item_index = ItemClusteredIndex(item_index_cfg)
+            self.item_index = ItemClusteredIndex(item_index_cfg,
+                                                 mesh=self.mesh,
+                                                 mesh_axis=self.axis)
 
         self.scores: Optional[jnp.ndarray] = None    # (U, k)
         self.idx: Optional[jnp.ndarray] = None       # (U, k)
@@ -295,7 +301,8 @@ class CFEngine:
         if self.neighbor_mode == "approx":
             self.index.fit(self.ratings, self.means)
             self.scores, self.idx = self.index.query(
-                self.ratings, self.means, k=self.k, measure=self.measure)
+                self.ratings, self.means, k=self.k, measure=self.measure,
+                beta=self.pcc_sig_beta)
         else:
             self.scores, self.idx = self._topk(self.ratings)
         if self.item_index is not None:
@@ -309,15 +316,15 @@ class CFEngine:
         bs = min(self.block_size, ratings.shape[0])
         if self.backend == "sequential":
             return nb.topk_neighbors(ratings, self.k, measure=self.measure,
-                                     block_size=bs)
+                                     block_size=bs, beta=self.pcc_sig_beta)
         if self.backend == "sharded":
             return dist_engine.sharded_topk(
                 ratings, self.k, self.mesh, measure=self.measure,
-                axis=self.axis, block_size=bs)
+                axis=self.axis, block_size=bs, beta=self.pcc_sig_beta)
         if self.backend == "ring":
             return dist_engine.ring_sharded_topk(
                 ratings, self.k, self.mesh, measure=self.measure,
-                axis=self.axis, block_size=bs)
+                axis=self.axis, block_size=bs, beta=self.pcc_sig_beta)
         return self._pallas_topk(ratings)
 
     def _pallas_topk(self, ratings) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -332,7 +339,8 @@ class CFEngine:
             s = fused_similarity(
                 ratings, block, measure=self.measure,
                 bm=min(256, n_users), bn=min(256, block.shape[0]),
-                bk=min(512, n_items), interpret=self.interpret)
+                bk=min(512, n_items), interpret=self.interpret,
+                beta=self.pcc_sig_beta)
             cand_ids = b0 + jnp.arange(block.shape[0])
             s = jnp.where(cand_ids[None, :] == q_ids[:, None], nb.NEG_INF, s)
             ids = jnp.broadcast_to(cand_ids[None, :], s.shape)
@@ -426,7 +434,8 @@ class CFEngine:
 
         # 2. one (U, |S|) Gram pass for the changed pairwise terms
         cross_s, cross_i = _cross_scores(self.ratings, pad_touch_j,
-                                         measure=self.measure)
+                                         measure=self.measure,
+                                         beta=self.pcc_sig_beta)
 
         # 3. cheap path: drop stale entries, merge fresh (row, S) scores,
         #    and certify which rows that provably repaired
@@ -448,7 +457,8 @@ class CFEngine:
             if self.neighbor_mode == "approx":
                 q_s, q_i = self.index.query(self.ratings, self.means,
                                             affected, k=self.k,
-                                            measure=self.measure)
+                                            measure=self.measure,
+                                            beta=self.pcc_sig_beta)
                 new_s = np.full((a_pad, self.k), nb.NEG_INF, np.float32)
                 new_i = np.full((a_pad, self.k), -1, np.int32)
                 new_s[:len(affected)] = np.asarray(q_s)
@@ -457,7 +467,8 @@ class CFEngine:
             else:
                 new_s, new_i = _rows_topk(self.ratings, rows_j, k=self.k,
                                           measure=self.measure,
-                                          block_size=self.block_size)
+                                          block_size=self.block_size,
+                                          beta=self.pcc_sig_beta)
             merged_s, merged_i = _scatter_rows(merged_s, merged_i, rows_j,
                                                new_s, new_i)
         self.scores = jax.block_until_ready(merged_s)
@@ -525,7 +536,8 @@ class CFEngine:
         rows[:len(users)] = users
         ref_s, ref_i = _rows_topk(self.ratings, jnp.asarray(rows),
                                   k=self.k, measure=self.measure,
-                                  block_size=self.block_size)
+                                  block_size=self.block_size,
+                                  beta=self.pcc_sig_beta)
         ref_i = np.asarray(ref_i)[:len(users)]
         got_i = np.asarray(self.idx)[users]
         hits = 0

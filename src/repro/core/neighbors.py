@@ -43,6 +43,7 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
                cand_offset: jnp.ndarray | int = 0,
                block_size: int = 1024,
                q_ids: jnp.ndarray | None = None,
+               beta: float | None = None,
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k neighbors for a query block against all candidate users.
 
@@ -75,7 +76,8 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
     def scan_body(carry, inp):
         best_s, best_i = carry
         b_idx, block = inp
-        s = sim.pairwise_similarity(q_block, block, measure=measure)
+        s = sim.pairwise_similarity(q_block, block, measure=measure,
+                                    beta=beta)
         cand_ids = cand_offset + b_idx * block_size + jnp.arange(block_size)
         # mask self matches and padding
         invalid = (cand_ids[None, :] == q_ids[:, None]) | \
@@ -92,13 +94,18 @@ def block_topk(q_block: jnp.ndarray, ratings: jnp.ndarray, k: int, *,
     return scores, idx
 
 
-@functools.partial(jax.jit, static_argnames=("k", "measure", "block_size"))
+@functools.partial(jax.jit, static_argnames=("k", "measure", "block_size",
+                                             "beta"))
 def topk_neighbors(ratings: jnp.ndarray, k: int, *, measure: str = "pcc",
-                   block_size: int = 1024,
+                   block_size: int = 1024, beta: float | None = None,
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """All-users top-k neighbors: (U, k) scores + (U, k) neighbor ids."""
+    """All-users top-k neighbors: (U, k) scores + (U, k) neighbor ids.
+
+    ``beta`` — the ``pcc_sig`` significance horizon (None → module
+    default); ignored by the other measures."""
     return block_topk(ratings, ratings, k, measure=measure,
-                      block_size=min(block_size, ratings.shape[0]))
+                      block_size=min(block_size, ratings.shape[0]),
+                      beta=beta)
 
 
 def neighbor_weight_matrix(scores: jnp.ndarray, idx: jnp.ndarray,

@@ -142,13 +142,34 @@ _EPILOGUES = {
 }
 
 
+def resolve_beta(beta) -> float:
+    """The ``pcc_sig`` shrink horizon: explicit value or module default.
+
+    Every scoring path (exact engines, fused kernel, index rerank) accepts
+    ``beta=None`` and resolves it here, so one engine-level setting reaches
+    all of them consistently.
+    """
+    b = PCC_SIG_BETA if beta is None else float(beta)
+    if b <= 0:
+        raise ValueError(f"pcc_sig beta must be > 0, got {b}")
+    return b
+
+
 def pairwise_similarity(ra: jnp.ndarray, rb: jnp.ndarray,
-                        measure: str = "pcc") -> jnp.ndarray:
-    """(m, D) × (n, D) → (m, n) similarity under ``measure``."""
+                        measure: str = "pcc",
+                        beta: float | None = None) -> jnp.ndarray:
+    """(m, D) × (n, D) → (m, n) similarity under ``measure``.
+
+    ``beta`` — the ``pcc_sig`` significance horizon (ignored by the other
+    measures); ``None`` uses :data:`PCC_SIG_BETA`.
+    """
     if measure not in _EPILOGUES:
         raise ValueError(f"unknown measure {measure!r}; want one of "
                          f"{SIMILARITY_MEASURES}")
-    return _EPILOGUES[measure](gram_terms(ra, rb))
+    g = gram_terms(ra, rb)
+    if measure == "pcc_sig":
+        return pcc_sig_from_gram(g, beta=resolve_beta(beta))
+    return _EPILOGUES[measure](g)
 
 
 def all_measures(ra: jnp.ndarray, rb: jnp.ndarray

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import List, Optional, Tuple
 
 import jax
@@ -62,6 +63,29 @@ from repro.core import similarity as sim
 from repro.index.kmeans import (KMeansStats, center_rows, kmeans,
                                 normalize_rows)
 from repro.kernels.cluster import centroid_distances
+from repro.kernels.rerank import fused_rerank_scores, rerank_scores_host
+
+try:                # optional host fast path for the proxy scan: torch's
+                    # CPU mm/topk are multithreaded and topk selects k
+                    # directly instead of materialising a full argsort
+                    # permutation (numpy's argpartition writes U int64s
+                    # per row — ~0.5 GB per query block at U=32768)
+    import torch as _torch
+except ImportError:  # pragma: no cover - container ships torch
+    _torch = None
+
+RERANK_MODES = ("auto", "gather", "grouped")
+
+# gather-mode rerank: queries per device call (block) — large blocks
+# amortise per-call dispatch/sort overhead; the byte budget bounds the
+# (b, M, nnz) gather intermediate for wide-support buckets
+_RERANK_BMAX = 1024
+_RERANK_BUDGET = 512 << 20
+# support-split threshold: queries rating more than this many items score
+# their pairs through the pair-major min-side pass (see _rerank_gather) —
+# each pair then walks min(nnz_q, nnz_c) items instead of nnz_q
+_REHOME_NNZ = 128
+_PAIR_BLOCK = 32768            # pair-major pass: pairs per device call
 
 
 def _bucket(n: int, cap: int = 1 << 30) -> int:
@@ -97,6 +121,21 @@ class IndexConfig:
     query_block: int = 256
     use_kernel: Optional[bool] = None     # None → auto: fused kernel on TPU
     interpret: bool = False               # force kernel interpret mode
+    # exact-rerank execution strategy:
+    #   "gather"  — the CPU fast path: queries batched by rated-item
+    #               support (CSR row lengths) into tight nnz buckets, the
+    #               (M, nnz) int8 gather walk + fused stats, with host
+    #               block prep pipelined against the async device call;
+    #   "grouped" — the accelerator path: queries grouped by taste
+    #               cluster, each group's candidate-union rows gathered
+    #               once and scored by the fused Pallas co-rated Gram
+    #               kernel (kernels/rerank.py; its OpenBLAS twin off-TPU);
+    #   "auto"    — grouped on TPU, gather elsewhere (measured: at CPU
+    #               memory bandwidth the candidate unions of a 3%-budget
+    #               shortlist barely overlap, so the union gather loses
+    #               to the bucketed walk — see BENCH_index.json).
+    rerank_mode: str = "auto"
+    rerank_batch: int = 256               # grouped-mode queries per union
     # auto-refit drift guard: when the cumulative fraction of rows whose
     # spill list changed since the last cold fit crosses this, refold
     # performs a fresh k-means fit (0 disables).  refold keeps assignments
@@ -113,6 +152,9 @@ class QueryStats:
     n_users: int           # candidate population the fractions refer to
     n_probed: int          # probed-member rows summed over queries
     n_reranked: int        # rows exactly reranked (true similarity)
+    seconds_shortlist: float = 0.0   # probe + proxy scan + selection
+    seconds_rerank: float = 0.0      # exact rerank stage
+    rerank_mode: str = ""            # resolved mode ("gather" | "grouped")
 
     def _frac(self, total: int) -> float:
         pairs = self.n_queries * max(self.n_users - 1, 1)
@@ -140,6 +182,9 @@ class RefoldStats:
     reassigned_frac: float = 0.0   # cumulative reassigned/rows since fit
     refit: bool = False            # this call crossed the drift threshold
                                    # and performed a cold refit
+    profile_refold: bool = False   # item index only: this call re-folded
+                                   # the user taste profiles from scratch,
+                                   # zeroing accumulated Σ w·Δproxy error
 
 
 @functools.partial(jax.jit, static_argnames=("features", "spherical"))
@@ -201,42 +246,23 @@ def _probe_clusters(proxies, centroids, q_ids, *, n_probe, use_kernel,
     return probe
 
 
-@jax.jit
-def _proxy_scores(proxies, q_ids, cand_ids):
-    """Proxy affinity of each (padded) query row against the shared
-    candidate set — one GEMM; self pairs and padding are knocked out."""
-    n_users = proxies.shape[0]
-    pq = proxies[jnp.clip(q_ids, 0, n_users - 1)]
-    pc = proxies[jnp.clip(cand_ids, 0, n_users - 1)]
-    sp = pq @ pc.T
-    invalid = (cand_ids[None, :] >= n_users) | \
-              (cand_ids[None, :] == q_ids[:, None])
-    return jnp.where(invalid, -jnp.inf, sp)
-
-
-@jax.jit
-def _proxy_scores_all(proxies, q_ids):
-    """Full-pool variant: no candidate gather (column j is user j), the
-    whole proxy table is the GEMM operand — what the pool shortcut runs."""
-    n_users = proxies.shape[0]
-    pq = proxies[jnp.clip(q_ids, 0, n_users - 1)]
-    sp = pq @ proxies.T
-    self_pair = jnp.arange(n_users, dtype=jnp.int32)[None, :] \
-        == q_ids[:, None]
-    return jnp.where(self_pair, -jnp.inf, sp)
-
-
-def _argpartition_rows(neg_sp: np.ndarray, m: int) -> np.ndarray:
+def _argpartition_rows(sp: np.ndarray, m: int) -> np.ndarray:
     """Row-wise top-m argpartition, split over two host threads (numpy's
-    partition releases the GIL, and the selection is per-row independent)."""
-    if neg_sp.shape[0] < 64:
-        return np.argpartition(neg_sp, m - 1, axis=1)[:, :m]
+    partition releases the GIL, and the selection is per-row independent).
+
+    Partitions the *upper* side in place of negating the matrix first —
+    at shortlist scale the score matrix is hundreds of MB, and the
+    negation pass alone used to cost seconds at CPU memory bandwidth.
+    """
+    kth = sp.shape[1] - m
+    if sp.shape[0] < 64:
+        return np.argpartition(sp, kth, axis=1)[:, kth:]
     from concurrent.futures import ThreadPoolExecutor
-    half = neg_sp.shape[0] // 2
+    half = sp.shape[0] // 2
     with ThreadPoolExecutor(max_workers=2) as pool:
-        top = pool.submit(np.argpartition, neg_sp[:half], m - 1, 1)
-        bot = np.argpartition(neg_sp[half:], m - 1, axis=1)
-        return np.concatenate([top.result()[:, :m], bot[:, :m]], axis=0)
+        top = pool.submit(np.argpartition, sp[:half], kth, 1)
+        bot = np.argpartition(sp[half:], kth, axis=1)
+        return np.concatenate([top.result()[:, kth:], bot[:, kth:]], axis=0)
 
 
 @jax.jit
@@ -246,9 +272,9 @@ def _user_norms_counts(ratings):
             jnp.sum(ratings > 0, axis=-1).astype(jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "measure"))
+@functools.partial(jax.jit, static_argnames=("k", "measure", "beta"))
 def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
-                   cand_ids, *, k, measure):
+                   cand_ids, *, k, measure, beta=sim.PCC_SIG_BETA):
     """Exact top-k over per-query candidate lists via the co-rated gather.
 
     The paper's insight, batched: every similarity term between a query and
@@ -301,7 +327,7 @@ def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
         pcc = jnp.clip(cov / jnp.maximum(denom, eps), -1.0, 1.0)
         s = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
         if measure == "pcc_sig":
-            s = s * (jnp.minimum(n, sim.PCC_SIG_BETA) / sim.PCC_SIG_BETA)
+            s = s * (jnp.minimum(n, beta) / beta)
 
     invalid = (cand_ids >= n_users) | (cand_ids == q_ids[:, None])
     s = jnp.where(invalid, nb.NEG_INF, s)
@@ -316,8 +342,59 @@ def _rerank_sparse(r_gather, norms, counts, q_ids, q_items, q_vals,
     return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "measure"))
-def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure):
+@functools.partial(jax.jit, static_argnames=("measure", "beta"))
+def _pair_scores_sparse(r_gather, norms, counts, tbl_items, tbl_vals,
+                        w_local, w_ids, v_ids, *, measure,
+                        beta=sim.PCC_SIG_BETA):
+    """Exact similarity of independent (walk, other) user pairs.
+
+    The pair-major leg of the support-split rerank: each pair walks the
+    *thinner* side's rated items.  ``tbl_items``/``tbl_vals``: the walk
+    bucket's padded per-user item/value tables (rows indexed by
+    ``w_local``); ``w_ids``/``v_ids``: global ids of the walk/other side.
+    Same formulas as ``_rerank_sparse`` — the similarity statistics are
+    symmetric in the pair, and for integer rating matrices every Gram sum
+    is an exact f32 integer, so which side walks cannot change the score.
+    Returns (P,) scores; caller discards padding slots.
+    """
+    n_users = r_gather.shape[0]
+    it = tbl_items[w_local]                                  # (P, nnz)
+    vq = tbl_vals[w_local]
+    safe_v = jnp.clip(v_ids, 0, n_users - 1)
+    rc = r_gather[safe_v[:, None], it].astype(jnp.float32)   # (P, nnz)
+    vq_pos = (vq > 0).astype(jnp.float32)
+    mc = (rc > 0).astype(jnp.float32)
+    eps = 1e-8
+    if measure == "cosine":
+        dot = jnp.sum(rc * vq, axis=-1)
+        s = dot / jnp.maximum(norms[w_ids] * norms[safe_v], eps)
+    elif measure == "jaccard":
+        n = jnp.sum(mc * vq_pos, axis=-1)
+        union = counts[w_ids] + counts[safe_v] - n
+        s = n / jnp.maximum(union, eps)
+    else:   # pcc / pcc_sig over co-rated items, normalised to [0, 1]
+        n = jnp.sum(mc * vq_pos, axis=-1)
+        dot = jnp.sum(rc * vq, axis=-1)
+        sum_a = jnp.sum(mc * vq, axis=-1)
+        sum_b = jnp.sum(rc * vq_pos, axis=-1)
+        sq_a = jnp.sum(mc * vq * vq, axis=-1)
+        sq_b = jnp.sum(rc * rc * vq_pos, axis=-1)
+        cov = n * dot - sum_a * sum_b
+        var_a = n * sq_a - sum_a * sum_a
+        var_b = n * sq_b - sum_b * sum_b
+        denom = jnp.sqrt(jnp.maximum(var_a, 0.0)
+                         * jnp.maximum(var_b, 0.0))
+        valid = (n >= 2) & (denom > eps)
+        pcc = jnp.clip(cov / jnp.maximum(denom, eps), -1.0, 1.0)
+        s = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+        if measure == "pcc_sig":
+            s = s * (jnp.minimum(n, beta) / beta)
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("k", "measure", "beta"))
+def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure,
+                   beta=sim.PCC_SIG_BETA):
     """Exact top-k over a block-shared candidate set (the unfiltered path).
 
     Scores come from the same ``pairwise_similarity`` Gram pass the exact
@@ -330,7 +407,7 @@ def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure):
     n_users = ratings.shape[0]
     q = ratings[jnp.clip(q_ids, 0, n_users - 1)]
     cand = ratings[jnp.clip(cand_ids, 0, n_users - 1)]
-    s = sim.pairwise_similarity(q, cand, measure=measure)
+    s = sim.pairwise_similarity(q, cand, measure=measure, beta=beta)
     invalid = (~allowed) | (cand_ids[None, :] >= n_users) | \
               (cand_ids[None, :] == q_ids[:, None])
     s = jnp.where(invalid, nb.NEG_INF, s)
@@ -357,13 +434,18 @@ class _SpillClusterCore:
     query semantics.
     """
 
-    def __init__(self, cfg):
+    def __init__(self, cfg, mesh=None, mesh_axis: str = "data"):
         if cfg.features not in ("centered", "raw"):
             raise ValueError(f"unknown features {cfg.features!r}; "
                              "want 'centered' or 'raw'")
         if cfg.spill < 1:
             raise ValueError("spill must be ≥ 1")
+        if getattr(cfg, "rerank_mode", "auto") not in RERANK_MODES:
+            raise ValueError(f"unknown rerank_mode {cfg.rerank_mode!r}; "
+                             f"want one of {RERANK_MODES}")
         self.cfg = cfg
+        self.mesh = mesh              # k-means fit shards over this mesh
+        self.mesh_axis = mesh_axis
         self.n_rows = 0
         self.n_clusters = 0
         self.n_probe = 0
@@ -379,6 +461,89 @@ class _SpillClusterCore:
         self.last_refold: Optional[RefoldStats] = None
         self._reassigned_since_fit = 0
         self._gather_cache: Optional[tuple] = None
+        self._csr_cache: Optional[tuple] = None        # per-ratings CSR
+        self._proxies_np_cache: Optional[tuple] = None # per-proxies host copy
+        self._short_buf = None                         # torch GEMM output
+
+    def _ratings_csr(self, ratings):
+        """Host CSR view of the rating matrix (indptr, indices, data) —
+        the rerank's query-side item lists come straight from these arrays
+        instead of a per-block argsort over dense rows.  Cached per
+        ratings array (updates replace the array → identity invalidation).
+        """
+        if self._csr_cache is not None and self._csr_cache[0] is ratings:
+            return self._csr_cache[1]
+        rnp = np.asarray(ratings)
+        rows, cols = np.nonzero(rnp)
+        counts = np.bincount(rows, minlength=rnp.shape[0])
+        indptr = np.zeros(rnp.shape[0] + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        csr = (indptr, cols.astype(np.int32),
+               rnp[rows, cols].astype(np.float32))
+        self._csr_cache = (ratings, csr)
+        return csr
+
+    @staticmethod
+    def _rerank_bucket(nnz: int, n_items: int) -> int:
+        """Rated-item support bucket: multiples of 64 to 256, of 128 to
+        512, then powers of two — tight enough that a (M, nnz) gather
+        pads ~15% instead of ~45%, coarse enough to bound compiled
+        shapes."""
+        if nnz <= 256:
+            b = 64 * -(-nnz // 64)
+        elif nnz <= 512:
+            b = 128 * -(-nnz // 128)
+        else:
+            b = _bucket(nnz)
+        return min(b, n_items)
+
+    def _item_tables(self, ratings):
+        """Device-resident padded per-user item/value tables, bucketed by
+        rated-item support — the walk-side operands of the pair-major
+        rerank (rows gather sequentially on device, no host copies).
+        Returns ``(bucket_of (U,), local_of (U,), {bucket: (items, vals)})``
+        with items/vals jnp (U_b, bucket).  Cached per ratings array."""
+        if self._csr_cache is not None and len(self._csr_cache) > 2 and \
+                self._csr_cache[0] is ratings:
+            return self._csr_cache[2]
+        indptr, indices, data = self._ratings_csr(ratings)
+        n_users = len(indptr) - 1
+        n_items = ratings.shape[1]
+        nnz = (indptr[1:] - indptr[:-1]).astype(np.int64)
+        bucket_of = np.array([self._rerank_bucket(max(int(v), 1), n_items)
+                              for v in nnz], np.int32)
+        local_of = np.empty(n_users, np.int32)
+        tables = {}
+        for b in np.unique(bucket_of):
+            rows = np.nonzero(bucket_of == b)[0]
+            local_of[rows] = np.arange(len(rows))
+            items = np.zeros((len(rows), b), np.int32)
+            vals = np.zeros((len(rows), b), np.float32)
+            lens = nnz[rows]
+            total = int(lens.sum())
+            if total:
+                dst_row = np.repeat(np.arange(len(rows)), lens)
+                off = np.cumsum(lens) - lens
+                dst_col = np.arange(total) - np.repeat(off, lens)
+                src = np.arange(total) + np.repeat(indptr[rows] - off, lens)
+                items[dst_row, dst_col] = indices[src]
+                vals[dst_row, dst_col] = data[src]
+            tables[int(b)] = (jnp.asarray(items), jnp.asarray(vals))
+        out = (bucket_of, local_of, tables)
+        self._csr_cache = (ratings, self._csr_cache[1], out)
+        return out
+
+    def _proxies_np(self) -> np.ndarray:
+        """Host copy of the proxy table for the OpenBLAS shortlist scan
+        (cached per proxies array — refolds replace the array)."""
+        if self._proxies_np_cache is not None and \
+                self._proxies_np_cache[0] is self.proxies:
+            return self._proxies_np_cache[1]
+        # np.array: jax hands back a read-only view; torch.from_numpy
+        # wants a writable buffer
+        p_np = np.array(np.asarray(self.proxies), np.float32, order="C")
+        self._proxies_np_cache = (self.proxies, p_np)
+        return p_np
 
     def _gather_source(self, ratings):
         """Rerank gather operand (``predict.make_gather_source``: int8
@@ -428,7 +593,8 @@ class _SpillClusterCore:
         self.centroids, _, _, self.kmeans_stats = kmeans(
             self.proxies, self.n_clusters, seed=self.cfg.seed,
             iters=self.cfg.iters, block_size=self.cfg.kmeans_block,
-            use_kernel=self._use_kernel(), interpret=self.cfg.interpret)
+            use_kernel=self._use_kernel(), interpret=self.cfg.interpret,
+            mesh=self.mesh, axis=self.mesh_axis)
         ids, dist = _spill_assign(
             self.proxies, self.centroids, spill=spill,
             block_size=min(self.cfg.kmeans_block, self.n_rows),
@@ -672,8 +838,9 @@ class ClusteredIndex(_SpillClusterCore):
     every call, so one index serves whatever snapshot the caller holds.
     """
 
-    def __init__(self, cfg: IndexConfig = IndexConfig()):
-        super().__init__(cfg)
+    def __init__(self, cfg: IndexConfig = IndexConfig(), mesh=None,
+                 mesh_axis: str = "data"):
+        super().__init__(cfg, mesh=mesh, mesh_axis=mesh_axis)
         self.last_query: Optional[QueryStats] = None
 
     @property
@@ -714,20 +881,41 @@ class ClusteredIndex(_SpillClusterCore):
         self._fit_clusters()
         return self
 
+    # auto rerank-mode split point: at rerank budgets ≥ ~8% of the pool
+    # the grouped candidate unions saturate and the union-GEMM beats the
+    # gather walk even on CPU (measured in BENCH_index.json: 2.3× at
+    # U=8192/15%); at thin budgets (2-3%) the unions barely overlap and
+    # the bucketed gather walk wins at CPU memory bandwidth
+    _GROUPED_FRAC = 0.08
+
+    def _rerank_mode(self, max_rerank: int = 0) -> str:
+        """Resolve ``cfg.rerank_mode``: grouped where the fused kernel
+        runs (TPU) and at dense rerank budgets on CPU, the bucketed
+        gather walk elsewhere (see IndexConfig)."""
+        if self.cfg.rerank_mode != "auto":
+            return self.cfg.rerank_mode
+        if self._use_kernel():
+            return "grouped"
+        return ("grouped" if max_rerank >= self._GROUPED_FRAC * self.n_rows
+                else "gather")
+
     # -- query -------------------------------------------------------------
     def query(self, ratings: jnp.ndarray, means: jnp.ndarray,
               user_ids=None, *, k: int, measure: str = "pcc",
-              n_probe: Optional[int] = None
+              n_probe: Optional[int] = None,
+              beta: Optional[float] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Top-k true-similarity neighbors through the two-stage pipeline.
 
         Returns ``(scores, neighbor_ids)`` of shape ``(len(user_ids), k)``;
-        sets ``self.last_query`` with work accounting.  With ``n_probe ==
-        n_clusters`` and ``rerank_frac == 0`` the result is bit-identical
-        to the exact engines.
+        sets ``self.last_query`` with work accounting and per-stage wall
+        times.  ``beta`` is the ``pcc_sig`` shrink horizon (None → module
+        default).  With ``n_probe == n_clusters`` and ``rerank_frac == 0``
+        the result is bit-identical to the exact engines.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
+        beta = sim.resolve_beta(beta)
         uids = (np.arange(self.n_users, dtype=np.int32) if user_ids is None
                 else np.atleast_1d(np.asarray(user_ids, np.int32)))
         n_probe = min(n_probe or self.n_probe, self.n_clusters)
@@ -737,6 +925,9 @@ class ClusteredIndex(_SpillClusterCore):
         out_i = np.empty((len(uids), k), np.int32)
         n_probed = 0
         n_reranked = 0
+        t_short = 0.0
+        t_rerank = 0.0
+        t0 = time.perf_counter()
 
         # pass 1 — probe clusters and build per-query shortlists; blocks
         # whose candidate union already fits the rerank budget go straight
@@ -745,8 +936,14 @@ class ClusteredIndex(_SpillClusterCore):
         # than the query probes (n_probe·spill ≥ C), the block union
         # provably saturates to ~all users — the pool shortcut skips the
         # per-block probe/set algebra and scans the full proxy table.
+        # The proxy scan and top-M selection run on the host (OpenBLAS +
+        # threaded introselect on the upper side): at shortlist scale the
+        # score matrix never round-trips through a device buffer.
         pool_all = (bool(max_rerank) and max_rerank < self.n_users
                     and n_probe * self.spill_ids.shape[1] >= self.n_clusters)
+        # host proxy table only exists on the filtered path; the
+        # unfiltered/degenerate mode never pays the copy (cached anyway)
+        p_np = self._proxies_np() if max_rerank else None
         if pool_all:
             cand_all = np.arange(self.n_users, dtype=np.int32)
             # no per-block probe work here, so score in tall blocks — the
@@ -759,10 +956,10 @@ class ClusteredIndex(_SpillClusterCore):
             nv = len(ids)
             ids_pad = np.full((bq,), self.n_users, np.int32)
             ids_pad[:nv] = ids
-            ids_j = jnp.asarray(ids_pad)
             if pool_all:
                 cand, cand_pad = cand_all, cand_all
             else:
+                ids_j = jnp.asarray(ids_pad)
                 probe = np.asarray(_probe_clusters(
                     self.proxies, self.centroids, ids_j, n_probe=n_probe,
                     use_kernel=self._use_kernel(),
@@ -775,19 +972,46 @@ class ClusteredIndex(_SpillClusterCore):
                 cand_pad[:len(cand)] = cand
             if max_rerank and max_rerank < len(cand):
                 # filtered path: shortlist by proxy affinity against the
-                # block's probed-cluster union — one GEMM (gather-free
-                # under the pool shortcut) + threaded host selection
+                # block's probed-cluster union — one host GEMM (gather-free
+                # under the pool shortcut) + top-M selection.  torch's mm
+                # and topk (both multithreaded, and topk selects k directly
+                # instead of writing a full argsort permutation) run ~2×
+                # faster than the numpy GEMM + threaded introselect pair,
+                # which falls back in when torch is unavailable.
                 n_probed += nv * len(cand)
-                if pool_all:
-                    sp = np.asarray(_proxy_scores_all(self.proxies,
-                                                      ids_j))[:nv]
+                q_c = np.ascontiguousarray(p_np[ids])
+                if _torch is not None:
+                    b_c = p_np if pool_all \
+                        else np.ascontiguousarray(p_np[cand])
+                    if self._short_buf is None or \
+                            self._short_buf.shape[1] != len(b_c) or \
+                            self._short_buf.shape[0] < nv:
+                        self._short_buf = _torch.empty(
+                            nv, len(b_c), dtype=_torch.float32)
+                    sp_t = self._short_buf[:nv]
+                    _torch.mm(_torch.from_numpy(q_c),
+                              _torch.from_numpy(b_c).T, out=sp_t)
+                    sp = sp_t.numpy()       # shared-memory view
                 else:
-                    sp = np.asarray(_proxy_scores(
-                        self.proxies, ids_j, jnp.asarray(cand_pad)))[:nv]
-                sel = _argpartition_rows(-sp, max_rerank)
-                short_np = np.where(
-                    np.take_along_axis(sp, sel, 1) == -np.inf,
-                    self.n_users, cand_pad[sel]).astype(np.int32)
+                    sp = q_c @ (p_np.T if pool_all else p_np[cand].T)
+                if pool_all:                # self-pair knockout
+                    sp[np.arange(nv), ids] = -np.inf
+                else:
+                    at = np.searchsorted(cand, ids)
+                    hit = np.nonzero((at < len(cand))
+                                     & (cand[np.minimum(at, len(cand) - 1)]
+                                        == ids))[0]
+                    sp[hit, at[hit]] = -np.inf
+                if _torch is not None:
+                    selv_t, sel_t = _torch.topk(sp_t, max_rerank, dim=1,
+                                                sorted=False)
+                    selv, sel = selv_t.numpy(), sel_t.numpy()
+                else:
+                    sel = _argpartition_rows(sp, max_rerank)
+                    selv = np.take_along_axis(sp, sel, 1)
+                picked = sel if pool_all else cand[sel]
+                short_np = np.where(selv == -np.inf, self.n_users,
+                                    picked).astype(np.int32)
                 n_reranked += int((short_np < self.n_users).sum())
                 pend_pos.append(np.arange(lo, lo + nv))
                 pend_short.append(short_np)
@@ -806,65 +1030,305 @@ class ClusteredIndex(_SpillClusterCore):
                 n_reranked += n_pairs
                 s, i = _rerank_shared(ratings, ids_j, jnp.asarray(cand_pad),
                                       jnp.asarray(allowed), k=k,
-                                      measure=measure)
+                                      measure=measure, beta=beta)
                 out_s[lo:lo + bq] = np.asarray(s)[:nv]
                 out_i[lo:lo + bq] = np.asarray(i)[:nv]
+        t_short = time.perf_counter() - t0
 
-        # pass 2 — exact sparse rerank of the shortlists, queries ordered
-        # by rated-item count so each block's (b, M, nnz) gather is tightly
-        # bucketed and bounded in memory
+        # pass 2 — exact rerank of the shortlists
+        mode = self._rerank_mode(max_rerank)
         if pend_pos:
+            t0 = time.perf_counter()
             pos = np.concatenate(pend_pos)
-            # ascending shortlists give the gather a monotone row walk
+            # ascending shortlists give the gather a monotone row walk and
+            # make stable score sorts canonical (lower id wins ties)
             shorts = np.sort(np.concatenate(pend_short, axis=0), axis=1)
             q_all = uids[pos]
-            # only the pending queries' rows come to the host — an
-            # update-path repair of a few rows must not copy the matrix
-            q_rows = np.asarray(ratings[jnp.asarray(q_all)])
-            nnz = np.count_nonzero(q_rows, axis=1)
-            order = np.argsort(nnz, kind="stable")
             norms, counts = _user_norms_counts(ratings)
-            r_gather = self._gather_source(ratings)
-            budget = 256 << 20                      # gather bytes per block
-            lo2 = 0
-            while lo2 < len(order):
-                tail = order[lo2:lo2 + self.cfg.query_block]
-                nnz_b = _bucket(max(int(nnz[tail].max()), 1))
-                b = int(max(8, 1 << int(np.log2(
-                    max(budget // (max_rerank * nnz_b * 4), 8)))))
-                b = min(b, self.cfg.query_block, _bucket(len(order)))
-                sel = order[lo2:lo2 + b]
-                nnz_b = min(_bucket(max(int(nnz[sel].max()), 1)),
-                            q_rows.shape[1])
-                # always pad rows to the bucket's block size so each nnz
-                # bucket compiles exactly one executable (tails included)
-                bp = b
-                # vectorized rated-item extraction: stable argsort floats
-                # the nonzero cells left, keeping item ids ascending
-                rows = q_rows[sel]
-                idx = np.argsort(rows == 0, axis=1,
-                                 kind="stable")[:, :nnz_b]
-                items = np.zeros((bp, nnz_b), np.int32)
-                vals = np.zeros((bp, nnz_b), np.float32)
-                items[:len(sel)] = idx
-                vals[:len(sel)] = np.take_along_axis(rows, idx, axis=1)
-                qi_pad = np.full((bp,), self.n_users, np.int32)
-                qi_pad[:len(sel)] = q_all[sel]
-                sh_pad = np.full((bp, max_rerank), self.n_users, np.int32)
-                sh_pad[:len(sel)] = shorts[sel]
-                s, i = _rerank_sparse(
-                    r_gather, norms, counts, jnp.asarray(qi_pad),
-                    jnp.asarray(items), jnp.asarray(vals),
-                    jnp.asarray(sh_pad), k=k, measure=measure)
-                out_s[pos[sel]] = np.asarray(s)[:len(sel)]
-                out_i[pos[sel]] = np.asarray(i)[:len(sel)]
-                lo2 += b
+            if mode == "grouped":
+                self._rerank_grouped(ratings, norms, counts, q_all, shorts,
+                                     pos, out_s, out_i, k=k,
+                                     measure=measure, beta=beta)
+            else:
+                self._rerank_gather(ratings, norms, counts, q_all, shorts,
+                                    pos, out_s, out_i, k=k,
+                                    measure=measure, beta=beta,
+                                    max_rerank=max_rerank)
+            t_rerank = time.perf_counter() - t0
 
         self.last_query = QueryStats(n_queries=len(uids),
                                      n_users=self.n_users,
                                      n_probed=n_probed,
-                                     n_reranked=n_reranked)
+                                     n_reranked=n_reranked,
+                                     seconds_shortlist=t_short,
+                                     seconds_rerank=t_rerank,
+                                     rerank_mode=mode)
         return jnp.asarray(out_s), jnp.asarray(out_i)
+
+    def _rerank_gather(self, ratings, norms, counts, q_all, shorts, pos,
+                       out_s, out_i, *, k, measure, beta, max_rerank):
+        """The CSR-batched gather walk (CPU fast path).
+
+        Queries are ordered by rated-item support (their CSR row length)
+        and batched into support buckets, so each block compiles one tight
+        ``(b, M, nnz)`` executable; rated-item lists slice straight out of
+        the cached CSR arrays (no dense-row argsort), and the next block's
+        host prep overlaps the in-flight async device call.
+
+        Queries rating more than ``_REHOME_NNZ`` items take the
+        *support-split* path instead: their (query, candidate) pairs are
+        re-homed to the pair-major pass, which walks each pair over the
+        **thinner** side's rated items (``_pair_scores_sparse``) — the
+        similarity statistics live on the co-rated set, so either side's
+        support carries them, and min(nnz_q, nnz_c) is typically several
+        times smaller than a wide query's nnz.  Scores are identical
+        (bit-identical for integer ratings: every Gram sum is an exact
+        integer either way), only the walk order changes.
+        """
+        # an update-path repair of a few rows must not walk the whole
+        # matrix: below this pending-query count (with no CSR cached for
+        # this ratings array) the item lists come from just the pending
+        # rows, and the support-split stays off (its per-user item
+        # tables are a full-matrix artifact)
+        cached = self._csr_cache is not None and \
+            self._csr_cache[0] is ratings
+        if cached or len(q_all) > 256:
+            indptr, indices, data = self._ratings_csr(ratings)
+            nnz_user = (indptr[1:] - indptr[:-1]).astype(np.int64)
+            nnz = nnz_user[q_all]
+            row_key = q_all
+            heavy = np.nonzero(nnz > _REHOME_NNZ)[0]
+        else:
+            q_rows = np.asarray(ratings[jnp.asarray(q_all)])
+            rr, cc = np.nonzero(q_rows)
+            nnz = np.bincount(rr, minlength=len(q_all)).astype(np.int64)
+            indptr = np.zeros(len(q_all) + 1, np.int64)
+            np.cumsum(nnz, out=indptr[1:])
+            indices = cc.astype(np.int32)
+            data = q_rows[rr, cc].astype(np.float32)
+            row_key = np.arange(len(q_all))
+            heavy = np.empty(0, np.int64)
+        r_gather = self._gather_source(ratings)
+        n_items = ratings.shape[1]
+        bmax = max(_RERANK_BMAX, self.cfg.query_block)
+
+        if len(heavy):
+            self._rerank_pairs(ratings, norms, counts, q_all, shorts, pos,
+                               out_s, out_i, heavy, nnz_user, k=k,
+                               measure=measure, beta=beta)
+            light = np.nonzero(nnz <= _REHOME_NNZ)[0]
+            order = light[np.argsort(nnz[light], kind="stable")]
+        else:
+            order = np.argsort(nnz, kind="stable")
+
+        def prep(lo2):
+            """Host-side block prep: padded item/value/shortlist arrays."""
+            tail = order[lo2:lo2 + bmax]
+            nnz_b = self._rerank_bucket(max(int(nnz[tail].max()), 1),
+                                        n_items)
+            b = int(max(8, 1 << int(np.log2(
+                max(_RERANK_BUDGET // (max_rerank * nnz_b * 4), 8)))))
+            b = min(b, bmax, _bucket(len(order)))
+            sel = order[lo2:lo2 + b]
+            nnz_b = self._rerank_bucket(max(int(nnz[sel].max()), 1),
+                                        n_items)
+            items = np.zeros((b, nnz_b), np.int32)
+            vals = np.zeros((b, nnz_b), np.float32)
+            starts = indptr[row_key[sel]]
+            lens = nnz[sel]
+            # vectorized variable-length row copy out of the CSR arrays
+            total = int(lens.sum())
+            if total:
+                dst_row = np.repeat(np.arange(len(sel)), lens)
+                dst_col = np.arange(total) - np.repeat(
+                    np.cumsum(lens) - lens, lens)
+                src = np.arange(total) + np.repeat(
+                    starts - (np.cumsum(lens) - lens), lens)
+                items[dst_row, dst_col] = indices[src]
+                vals[dst_row, dst_col] = data[src]
+            qi_pad = np.full((b,), self.n_users, np.int32)
+            qi_pad[:len(sel)] = q_all[sel]
+            sh_pad = np.full((b, max_rerank), self.n_users, np.int32)
+            sh_pad[:len(sel)] = shorts[sel]
+            return lo2 + b, sel, items, vals, qi_pad, sh_pad
+
+        lo2 = 0
+        pending = None          # (sel, async device result)
+        while lo2 < len(order) or pending is not None:
+            nxt = None
+            if lo2 < len(order):
+                lo2, sel, items, vals, qi_pad, sh_pad = prep(lo2)
+                s, i = _rerank_sparse(
+                    r_gather, norms, counts, jnp.asarray(qi_pad),
+                    jnp.asarray(items), jnp.asarray(vals),
+                    jnp.asarray(sh_pad), k=k, measure=measure, beta=beta)
+                nxt = (sel, s, i)
+            if pending is not None:
+                sel_p, s_p, i_p = pending
+                out_s[pos[sel_p]] = np.asarray(s_p)[:len(sel_p)]
+                out_i[pos[sel_p]] = np.asarray(i_p)[:len(sel_p)]
+            pending = nxt
+
+    def _rerank_pairs(self, ratings, norms, counts, q_all, shorts, pos,
+                      out_s, out_i, heavy, nnz_user, *, k, measure, beta):
+        """Pair-major min-side scoring for wide-support queries.
+
+        Flattens the heavy queries' (query, candidate) pairs, picks the
+        thinner side of each as the walk side, groups pairs by the walk
+        side's support bucket (so every block compiles one tight
+        ``(P, nnz)`` executable over the padded item tables), scores them
+        with ``_pair_scores_sparse``, scatters scores back to each query's
+        shortlist slots, and selects the canonical top-k on the host.
+        """
+        bucket_of, local_of, tables = self._item_tables(ratings)
+        r_gather = self._gather_source(ratings)
+        nh, m = len(heavy), shorts.shape[1]
+        sh_h = shorts[heavy]
+        q_h = q_all[heavy]
+        valid = (sh_h < self.n_users).ravel()
+        rows_rep = np.repeat(np.arange(nh, dtype=np.int64), m)[valid]
+        slot = np.tile(np.arange(m, dtype=np.int64), nh)[valid]
+        pq = np.repeat(q_h.astype(np.int64), m)[valid]
+        pc = sh_h.ravel().astype(np.int64)[valid]
+        keep = pq != pc                       # self pairs stay NEG_INF
+        rows_rep, slot, pq, pc = (rows_rep[keep], slot[keep], pq[keep],
+                                  pc[keep])
+        # similarity is symmetric: mutual pairs — (q, c) and (c, q) both
+        # re-homed — are scored once and scattered to both slots
+        pkey = np.minimum(pq, pc) * np.int64(self.n_users) \
+            + np.maximum(pq, pc)
+        ukey, inv = np.unique(pkey, return_inverse=True)
+        first = np.full(len(ukey), -1, np.int64)
+        first_src = np.arange(len(pkey))[::-1]
+        first[inv[::-1]] = first_src            # first occurrence wins
+        pq_u, pc_u = pq[first], pc[first]
+        walk_c = nnz_user[pc_u] < nnz_user[pq_u]   # ties walk the query side
+        w_ids = np.where(walk_c, pc_u, pq_u).astype(np.int32)
+        v_ids = np.where(walk_c, pq_u, pc_u).astype(np.int32)
+        pair_scores = np.empty(len(ukey), np.float32)
+
+        scores_h = np.full((nh, m), np.float32(nb.NEG_INF), np.float32)
+        w_bkt = bucket_of[w_ids]
+        order_p = np.lexsort((w_ids, w_bkt))  # bucket-major, row-coherent
+        bounds = np.searchsorted(w_bkt[order_p],
+                                 np.unique(w_bkt).astype(np.int64))
+        bounds = np.append(bounds, len(order_p))
+        pending = None
+        chunks = []
+        for gi in range(len(bounds) - 1):
+            for lo in range(bounds[gi], bounds[gi + 1], _PAIR_BLOCK):
+                chunks.append((lo, min(lo + _PAIR_BLOCK, bounds[gi + 1])))
+        ci = 0
+        while ci < len(chunks) or pending is not None:
+            nxt = None
+            if ci < len(chunks):
+                lo, hi = chunks[ci]
+                ci += 1
+                sel = order_p[lo:hi]
+                bkt = int(w_bkt[sel[0]])
+                pb = _bucket(len(sel), _PAIR_BLOCK)
+                wl = np.zeros((pb,), np.int32)
+                wi = np.zeros((pb,), np.int32)
+                vi = np.zeros((pb,), np.int32)
+                wl[:len(sel)] = local_of[w_ids[sel]]
+                wi[:len(sel)] = w_ids[sel]
+                vi[:len(sel)] = v_ids[sel]
+                it, vl = tables[bkt]
+                s = _pair_scores_sparse(
+                    r_gather, norms, counts, it, vl, jnp.asarray(wl),
+                    jnp.asarray(wi), jnp.asarray(vi), measure=measure,
+                    beta=beta)
+                nxt = (sel, s)
+            if pending is not None:
+                sel_p, s_p = pending
+                pair_scores[sel_p] = np.asarray(s_p)[:len(sel_p)]
+            pending = nxt
+        scores_h[rows_rep, slot] = pair_scores[inv]
+
+        # canonical host selection: stable sort on descending score over
+        # the ascending shortlist reproduces the exact (-score, id) order
+        o = np.argsort(-scores_h, axis=1, kind="stable")[:, :k]
+        top_s = np.take_along_axis(scores_h, o, axis=1)
+        top_i = np.take_along_axis(sh_h, o, axis=1).astype(np.int32)
+        if top_s.shape[1] < k:
+            padw = k - top_s.shape[1]
+            top_s = np.pad(top_s, ((0, 0), (0, padw)),
+                           constant_values=np.float32(nb.NEG_INF))
+            top_i = np.pad(top_i, ((0, 0), (0, padw)),
+                           constant_values=self.n_users)
+        top_i = np.where(top_s <= np.float32(nb.NEG_INF), -1, top_i)
+        out_s[pos[heavy]] = top_s
+        out_i[pos[heavy]] = top_i
+
+    def _rerank_grouped(self, ratings, norms, counts, q_all, shorts, pos,
+                        out_s, out_i, *, k, measure, beta):
+        """The grouped union-Gram rerank (accelerator path).
+
+        Queries are grouped by taste cluster, each group's candidate-union
+        rows are gathered once, and the whole (group, union) score block
+        comes out of one fused pass — the Pallas kernel on TPU, its
+        OpenBLAS twin elsewhere.  Results are identical to the gather walk
+        (bit-identical for integer rating matrices).
+        """
+        use_kernel = self._use_kernel() or self.cfg.interpret
+        groups = np.argsort(self.assign[q_all], kind="stable")
+        rnp = None if use_kernel else np.asarray(ratings)
+        norms_np = np.asarray(norms)
+        counts_np = np.asarray(counts)
+        r_gather = self._gather_source(ratings)
+        neg = np.float32(nb.NEG_INF)
+        for glo in range(0, len(groups), self.cfg.rerank_batch):
+            gs = groups[glo:glo + self.cfg.rerank_batch]
+            q = q_all[gs]
+            sh = shorts[gs]                                   # (g, M)
+            cu = np.unique(sh)
+            cu = cu[cu < self.n_users]
+            if not len(cu):
+                out_s[pos[gs]] = neg
+                out_i[pos[gs]] = -1
+                continue
+            if use_kernel:
+                # pad the group and union to buckets so repeated groups
+                # reuse a handful of compiled kernels; padded union rows
+                # duplicate cu[0] (never referenced by the column map)
+                gb = min(self.cfg.rerank_batch, _bucket(len(groups)))
+                kb = _bucket(len(cu))
+                q_pad = np.pad(q, (0, gb - len(q)), constant_values=q[0])
+                cu_j = jnp.asarray(np.pad(cu, (0, kb - len(cu)),
+                                          constant_values=cu[0]))
+                s = np.asarray(fused_rerank_scores(
+                    ratings[jnp.asarray(q_pad)], r_gather[cu_j],
+                    norms[cu_j], counts[cu_j], measure=measure,
+                    beta=beta, interpret=self.cfg.interpret)
+                    )[:len(gs), :len(cu)]
+            else:
+                s = rerank_scores_host(
+                    rnp[q], np.take(rnp, cu, axis=0),
+                    norms_np[cu], counts_np[cu],
+                    measure=measure, beta=beta)
+            # per-query selection: map shortlists to union columns (an
+            # appended NEG_INF column absorbs padding ids), knock out
+            # self pairs, and take the canonical top-k — a stable sort on
+            # descending score over the ascending shortlist reproduces
+            # the (-score, id) tie-break of the exact engines
+            s_ext = np.concatenate(
+                [s, np.full((len(gs), 1), neg, np.float32)], axis=1)
+            colmap = np.full(self.n_users + 1, len(cu), np.int32)
+            colmap[cu] = np.arange(len(cu))
+            sc = np.take_along_axis(s_ext, colmap[sh], axis=1)  # (g, M)
+            sc[sh == q[:, None]] = neg
+            o = np.argsort(-sc, axis=1, kind="stable")[:, :k]
+            top_s = np.take_along_axis(sc, o, axis=1)
+            top_i = np.take_along_axis(sh, o, axis=1).astype(np.int32)
+            if top_s.shape[1] < k:
+                padw = k - top_s.shape[1]
+                top_s = np.pad(top_s, ((0, 0), (0, padw)),
+                               constant_values=neg)
+                top_i = np.pad(top_i, ((0, 0), (0, padw)),
+                               constant_values=self.n_users)
+            top_i = np.where(top_s <= neg, -1, top_i)
+            out_s[pos[gs]] = top_s
+            out_i[pos[gs]] = top_i
 
     # -- incremental maintenance ------------------------------------------
     def refold(self, ratings: jnp.ndarray, means: jnp.ndarray,

@@ -103,8 +103,11 @@ class ItemIndexConfig:
     project_dim: int = 128
     spill: int = 2
     shortlist: int = 512
-    shortlist_mode: str = "auto"          # "support" | "proxy" | "auto"
-                                          # (auto: support off-TPU)
+    shortlist_mode: str = "auto"          # "support" | "kernel" | "proxy" |
+                                          # "auto" (support on CPU, kernel —
+                                          # the fused Pallas segmented SpMM
+                                          # over the same exact num/den
+                                          # form — on TPU)
     item_block: int = 512                 # rerank/predict tile width
     kmeans_block: int = 2048
     query_block: int = 256
@@ -114,6 +117,13 @@ class ItemIndexConfig:
     use_kernel: Optional[bool] = None     # None → auto: fused kernel on TPU
     interpret: bool = False
     refit_reassign_frac: float = 0.5      # shared auto-refit drift guard
+    # periodic profile re-fold: the Σ w·Δproxy profile correction is exact
+    # in exact arithmetic but accumulates float error over many refolds;
+    # when the cumulative touched-column fraction since the last fold
+    # crosses this, profiles are re-folded from scratch (one (U,I)·(I,p)
+    # matmul), zeroing the drift (0 disables).  Piggybacks the same
+    # refold bookkeeping as the auto-refit guard, at a lower threshold.
+    profile_refold_frac: float = 0.25
 
 
 @dataclasses.dataclass
@@ -285,22 +295,46 @@ class ItemClusteredIndex(_SpillClusterCore):
     module docstring).  Never owns the rating matrix or the neighbor
     cache — the caller (``CFEngine``) passes both into every call."""
 
-    def __init__(self, cfg: ItemIndexConfig = ItemIndexConfig()):
-        if cfg.shortlist_mode not in ("support", "proxy", "auto"):
+    def __init__(self, cfg: ItemIndexConfig = ItemIndexConfig(),
+                 mesh=None, mesh_axis: str = "data"):
+        if cfg.shortlist_mode not in ("support", "kernel", "proxy", "auto"):
             raise ValueError(
                 f"unknown shortlist_mode {cfg.shortlist_mode!r}; "
-                "want 'support', 'proxy', or 'auto'")
-        super().__init__(cfg)
+                "want 'support', 'kernel', 'proxy', or 'auto'")
+        super().__init__(cfg, mesh=mesh, mesh_axis=mesh_axis)
         self.n_users = 0
         self.profiles: Optional[jnp.ndarray] = None   # (U, p) taste mass
         self._has_pos: Optional[jnp.ndarray] = None   # (U,) bool
         self._support_cache: Optional[tuple] = None   # per-ratings [dev|mask]
+        self._support_dense_cache: Optional[tuple] = None  # kernel operands
+        self._touched_since_profile = 0               # profile-refold drift
         self.last_recommend: Optional[RecommendStats] = None
 
     def _shortlist_mode(self) -> str:
         if self.cfg.shortlist_mode != "auto":
             return self.cfg.shortlist_mode
-        return "proxy" if jax.default_backend() == "tpu" else "support"
+        return "kernel" if jax.default_backend() == "tpu" else "support"
+
+    def _support_dense(self, ratings, means):
+        """Dense device-resident (U, I) deviation/mask operands for the
+        fused support-scorer kernel (``repro.kernels.support``), padded
+        once to the kernel's tile width so the jitted call never re-pads
+        them.  Cached per ratings array, like every derived operand."""
+        if self._support_dense_cache is not None and \
+                self._support_dense_cache[0] is ratings:
+            return self._support_dense_cache[1]
+        from repro.kernels.support import BT
+        mask = ratings > 0
+        dev = jnp.where(mask, ratings - means[:, None], 0.0
+                        ).astype(jnp.float32)
+        msk = mask.astype(jnp.float32)
+        pad = (-ratings.shape[1]) % min(BT, ratings.shape[1])
+        if pad:         # zero columns: den 0 → mean fallback, sliced off
+            dev = jnp.pad(dev, ((0, 0), (0, pad)))
+            msk = jnp.pad(msk, ((0, 0), (0, pad)))
+        pair = (dev, msk)
+        self._support_dense_cache = (ratings, pair)
+        return pair
 
     def _support_table(self, ratings, means):
         """The stacked [deviation | mask] scorer operand — sparse CSR
@@ -353,7 +387,10 @@ class ItemClusteredIndex(_SpillClusterCore):
         self.profiles = _fold_profiles(w, self.proxies)
         self._has_pos = has_pos
         self._support_cache = None
-        self._support_table(ratings, means)    # pre-warm the scorer operand
+        self._support_dense_cache = None
+        self._touched_since_profile = 0
+        if self._shortlist_mode() != "kernel":
+            self._support_table(ratings, means)   # pre-warm scorer operand
         return self
 
     # -- recommend ---------------------------------------------------------
@@ -380,10 +417,18 @@ class ItemClusteredIndex(_SpillClusterCore):
                     jnp.full((0, n), -1, jnp.int32))
         n_probe = min(n_probe or self.n_probe, self.n_clusters)
         shortlist = self.cfg.shortlist
-        if shortlist and self._shortlist_mode() == "support" \
+        s_mode = self._shortlist_mode()
+        if s_mode == "kernel" and jax.default_backend() != "tpu" \
+                and not self.cfg.interpret:
+            # Mosaic does not lower on CPU and interpret mode was not
+            # requested: score the same exact num/den form through the
+            # host support pass instead (the kernel's CPU twin)
+            s_mode = "support"
+        if shortlist and s_mode in ("support", "kernel") \
                 and max(n, shortlist) < self.n_items:
             return self._recommend_support(ratings, means, nb_scores,
-                                           nb_idx, uids, n=n)
+                                           nb_idx, uids, n=n,
+                                           scorer=s_mode)
         gather_src = self._gather_source(ratings)
         bq = min(self.cfg.query_block, _bucket(len(uids)))
         out_s = np.empty((len(uids), n), np.float32)
@@ -429,7 +474,7 @@ class ItemClusteredIndex(_SpillClusterCore):
                     sp = np.asarray(_shortlist_scores(
                         prof, self.proxies, jnp.asarray(cand_pad),
                         seen_rows))[:nv]
-                sel = _argpartition_rows(-sp, m_short)
+                sel = _argpartition_rows(sp, m_short)
                 short = np.where(
                     np.take_along_axis(sp, sel, 1) == -np.inf,
                     self.n_items, cand_pad[sel]).astype(np.int32)
@@ -488,12 +533,18 @@ class ItemClusteredIndex(_SpillClusterCore):
                 jnp.asarray(stacked), jnp.asarray(w),
                 jnp.asarray(safe_idx), jnp.asarray(q_means))).copy()
         num[seen_rows] = -np.inf
+        return self._select_shortlist(num, m_short)
 
+    def _select_shortlist(self, num: np.ndarray, m_short: int) -> np.ndarray:
+        """Canonical top-``m_short`` selection over scored rows (seen items
+        already at -inf) with the tie-boundary repair of
+        ``_score_select_rows``'s docstring."""
+        n_items = self.n_items
         sel = np.argpartition(num, n_items - m_short,
                               axis=1)[:, n_items - m_short:]
         selv = np.take_along_axis(num, sel, 1)
         shorts = np.where(selv == -np.inf, n_items, sel).astype(np.int32)
-        # canonical boundary repair (see docstring)
+        # canonical boundary repair (see _score_select_rows docstring)
         vb = np.min(np.where(selv == -np.inf, np.inf, selv), axis=1)
         vb = np.where(np.isfinite(vb), vb, np.inf)
         row_cnt = np.count_nonzero(num == vb[:, None], axis=1)
@@ -508,18 +559,25 @@ class ItemClusteredIndex(_SpillClusterCore):
         return np.sort(shorts, axis=1)
 
     def _recommend_support(self, ratings, means, nb_scores, nb_idx,
-                           uids: np.ndarray, *, n: int):
-        """Support-scorer path: one item-major sparse pass scores every
-        item exactly (f32, clip-and-tie epilogue), the canonical top
-        ``shortlist`` unseen items per user go to the exact rerank.
+                           uids: np.ndarray, *, n: int,
+                           scorer: str = "support"):
+        """Support-scorer path: every item scored with the exact num/den
+        predictor form, the canonical top ``shortlist`` unseen items per
+        user go to the exact rerank.
 
-        The sparse pass *is* the predictor — ``W @ [DEV|MASK]`` walked
-        row-major — so shortlist containment of the exact top-n is limited
-        only by float summation order; the rerank then restores scores
-        that are bit-consistent with the dense blocked path.
+        ``scorer="support"`` is the item-major sparse pass — one
+        ``W @ [DEV|MASK]`` product between the k-sparse neighbor-weight
+        matrix and the stacked deviation/mask CSR, walked row-major.
+        ``scorer="kernel"`` computes the same num/den form with the fused
+        Pallas segmented SpMM (``repro.kernels.support``) — the TPU twin,
+        gathering each neighbor row tile once through VMEM.  Either way
+        the scorer *is* the predictor, so shortlist containment of the
+        exact top-n is limited only by float summation order; the rerank
+        then restores scores bit-consistent with the dense blocked path.
         """
         from concurrent.futures import ThreadPoolExecutor
-        stacked = self._support_table(ratings, means)
+        stacked = (self._support_table(ratings, means)
+                   if scorer == "support" else None)
         n_items = self.n_items
         m_short = min(max(n, self.cfg.shortlist), n_items)
         gather_src = self._gather_source(ratings)
@@ -538,6 +596,18 @@ class ItemClusteredIndex(_SpillClusterCore):
                          sc_np[ids], 0.0).astype(np.float32)
             safe = np.where(idx_np[ids] >= 0, idx_np[ids], 0)
             seen = rnp[ids] > 0
+            if scorer == "kernel":
+                from repro.kernels.support import fused_support_scores
+                dev, msk = self._support_dense(ratings, means)
+                num = np.asarray(fused_support_scores(
+                    dev, msk, jnp.asarray(safe), jnp.asarray(w),
+                    means[jnp.asarray(ids)],
+                    interpret=self.cfg.interpret))[:, :n_items].copy()
+                num[seen] = -np.inf
+                half = (len(ids) + 1) // 2 if len(ids) >= 64 else len(ids)
+                return [pool.submit(self._select_shortlist,
+                                    num[h0:h0 + half], m_short)
+                        for h0 in range(0, len(ids), half)]
             half = (len(ids) + 1) // 2 if len(ids) >= 64 else len(ids)
             parts = [pool.submit(
                 self._score_select_rows, stacked, w[h0:h0 + half],
@@ -643,7 +713,23 @@ class ItemClusteredIndex(_SpillClusterCore):
             n_touched=int(t_items.size), n_changed_clusters=len(changed),
             n_reassigned=reassigned, n_full_rows=len(full_rows),
             n_certified=self.n_items - len(full_rows))
+
+        # periodic profile re-fold (ROADMAP "profile drift"): once the
+        # cumulative touched-column fraction crosses the threshold, zero
+        # the accumulated Σ w·Δproxy float error with one cold fold —
+        # piggybacking the same drift bookkeeping as the refit guard
+        self._touched_since_profile += int(t_items.size)
+        thr = getattr(self.cfg, "profile_refold_frac", 0.0)
+        if thr and self._touched_since_profile >= thr * self.n_items:
+            w_all, hp_all = _affinity_weights(ratings, means)
+            self.profiles = _fold_profiles(w_all, self.proxies)
+            self._has_pos = hp_all
+            self._touched_since_profile = 0
+            stats.profile_refold = True
+
         self._maybe_refit(ratings, means, stats)
+        if stats.refit:
+            self._touched_since_profile = 0    # fit re-folded profiles
         self.last_refold = stats
         return stats
 
@@ -687,5 +773,7 @@ class ItemClusteredIndex(_SpillClusterCore):
         self.profiles = jnp.asarray(
             np.asarray(tree["profiles"], np.float32))
         self._has_pos = jnp.asarray(np.asarray(tree["has_pos"]).astype(bool))
-        # the scorer operand is derived data: rebuilt lazily per ratings
+        # the scorer operands are derived data: rebuilt lazily per ratings
         self._support_cache = None
+        self._support_dense_cache = None
+        self._touched_since_profile = 0

@@ -15,6 +15,20 @@ farthest-point repair that keeps all ``n_clusters`` partitions live.
 
 Distances go through :func:`repro.kernels.cluster.centroid_distances` —
 the fused Pallas kernel on TPU, the jnp oracle elsewhere.
+
+Sharded fit
+-----------
+The blocked sweep is a per-row fold — exactly the shape ``shard_map``
+wants.  With ``mesh=`` the rows shard over a mesh axis, every device runs
+the same blocked scan over its shard, and the per-cluster sums/counts
+``psum`` across the axis; assignments/distances stay row-sharded and
+gather on the host.  The centroid update and the deterministic
+farthest-point reseed are global reductions over gathered per-row state,
+so they are unchanged.  On a 1-device mesh the shard is the whole array
+and the scan order is identical, so the fit is **bit-identical** to the
+unsharded path; on P devices the per-shard partial sums reduce in a
+different order, so centroids agree to float rounding (deterministic per
+``(seed, shape, P)``).
 """
 
 from __future__ import annotations
@@ -26,7 +40,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.kernels.cluster import centroid_distances
 
 
@@ -88,43 +104,78 @@ def _sweep(z, valid, centroids, *, block_size, n_clusters, use_kernel,
     return (sums, counts, assign.reshape(-1), best_d.reshape(-1))
 
 
-def _pad_rows(z: jnp.ndarray, block_size: int):
+def _pad_rows(z: jnp.ndarray, block_size: int, mult: int = 1):
     n = z.shape[0]
-    rem = n % block_size
-    valid = np.zeros((n + (block_size - rem if rem else 0),), bool)
+    unit = block_size * mult
+    rem = n % unit
+    valid = np.zeros((n + (unit - rem if rem else 0),), bool)
     valid[:n] = True
     if rem:
-        z = jnp.pad(z, ((0, block_size - rem), (0, 0)))
+        z = jnp.pad(z, ((0, unit - rem), (0, 0)))
     return z, jnp.asarray(valid)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_sweep(mesh, axis: str, *, block_size: int, n_clusters: int,
+                   use_kernel: bool, interpret: bool):
+    """Build (and cache) the shard_mapped blocked sweep for a mesh axis:
+    rows sharded, centroids replicated, sums/counts psum-reduced across
+    the axis, assignments/distances returned row-sharded."""
+
+    def local(z_s, valid_s, centroids):
+        sums, counts, assign, best_d = _sweep(
+            z_s, valid_s, centroids, block_size=block_size,
+            n_clusters=n_clusters, use_kernel=use_kernel,
+            interpret=interpret)
+        return (jax.lax.psum(sums, axis), jax.lax.psum(counts, axis),
+                assign, best_d)
+
+    return jax.jit(compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(), P(), P(axis), P(axis))))
 
 
 def kmeans(z: jnp.ndarray, n_clusters: int, *, seed: int = 0, iters: int = 8,
            block_size: int = 2048, use_kernel: bool = False,
-           interpret: bool = False
+           interpret: bool = False, mesh=None, axis: str = "data"
            ) -> Tuple[jnp.ndarray, np.ndarray, np.ndarray, KMeansStats]:
-    """Deterministic blocked k-means.
+    """Deterministic blocked k-means, optionally sharded over a mesh.
 
     Returns ``(centroids (C, D), assign (U,), best_dist (U,), stats)`` where
     ``assign[u]`` is the canonical nearest centroid of row ``u`` (ties →
     lowest cluster id) and ``best_dist[u]`` its squared distance — the
     invariant the index's refold certificate maintains under updates.
+
+    With ``mesh`` the blocked sweep runs under ``shard_map`` with rows
+    partitioned over ``axis`` (see module docstring): bit-identical on a
+    1-device mesh, float-rounding-identical (and deterministic) beyond.
     """
     n_rows, d_feat = z.shape
     if not 1 <= n_clusters <= n_rows:
         raise ValueError(f"need 1 <= n_clusters <= {n_rows}, "
                          f"got {n_clusters}")
-    block_size = min(block_size, n_rows)
+    n_shards = 1
+    if mesh is not None:
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                                if a == axis]))
+    block_size = min(block_size, max(n_rows // max(n_shards, 1), 1))
     rng = np.random.default_rng(seed)
     init_rows = np.sort(rng.choice(n_rows, size=n_clusters, replace=False))
     centroids = z[jnp.asarray(init_rows)]
 
-    z_p, valid = _pad_rows(z, block_size)
+    z_p, valid = _pad_rows(z, block_size, mult=n_shards)
+    if mesh is not None:
+        sweep = _sharded_sweep(mesh, axis, block_size=block_size,
+                               n_clusters=n_clusters, use_kernel=use_kernel,
+                               interpret=interpret)
+    else:
+        sweep = functools.partial(
+            _sweep, block_size=block_size, n_clusters=n_clusters,
+            use_kernel=use_kernel, interpret=interpret)
     n_reseeds = 0
     for _ in range(iters):
-        sums, counts, assign, best_d = _sweep(
-            z_p, valid, centroids, block_size=block_size,
-            n_clusters=n_clusters, use_kernel=use_kernel,
-            interpret=interpret)
+        sums, counts, assign, best_d = sweep(z_p, valid, centroids)
         counts_np = np.asarray(counts)
         new_c = np.asarray(sums) / np.maximum(counts_np, 1)[:, None]
         empty = np.nonzero(counts_np == 0)[0]
@@ -138,9 +189,7 @@ def kmeans(z: jnp.ndarray, n_clusters: int, *, seed: int = 0, iters: int = 8,
         centroids = jnp.asarray(new_c, jnp.float32)
 
     # final canonical assignment against the converged centroids
-    _, _, assign, best_d = _sweep(
-        z_p, valid, centroids, block_size=block_size, n_clusters=n_clusters,
-        use_kernel=use_kernel, interpret=interpret)
+    _, _, assign, best_d = sweep(z_p, valid, centroids)
     assign = np.array(assign[:n_rows])        # writable host copies: the
     best_d = np.array(best_d[:n_rows])        # index repairs them in place
     stats = KMeansStats(iters=iters, n_reseeds=n_reseeds,

@@ -28,6 +28,72 @@ def similarity_ref(ra: jnp.ndarray, rb: jnp.ndarray, measure: str = "all"):
     return out[measure]
 
 
+# -- fused co-rated Gram rerank ----------------------------------------------
+
+def rerank_scores_ref(q_vals: jnp.ndarray, cand_rows: jnp.ndarray,
+                      cand_norms: jnp.ndarray, cand_counts: jnp.ndarray,
+                      measure: str = "cosine",
+                      beta: float | None = None) -> jnp.ndarray:
+    """(G, J) query rows × (Kc, J) candidate-union rows → (G, Kc) exact
+    similarity under ``measure``, with full-row candidate norms/counts
+    passed in (the union block may be item-compressed, so they cannot be
+    derived from it).  Oracle for
+    ``repro.kernels.rerank.fused_rerank_scores`` and its host BLAS twin;
+    the same sparse num/den formulas as the index's ``_rerank_sparse``.
+    """
+    eps = 1e-8
+    beta = core_sim.resolve_beta(beta)
+    vq = q_vals.astype(jnp.float32)
+    rc = cand_rows.astype(jnp.float32)
+    mq = (vq > 0).astype(jnp.float32)
+    mc = (rc > 0).astype(jnp.float32)
+    dot_kw = dict(precision=jax.lax.Precision.HIGHEST)
+    if measure == "cosine":
+        dot = jnp.matmul(vq, rc.T, **dot_kw)
+        nq = jnp.sqrt(jnp.sum(vq * vq, axis=-1))[:, None]
+        return dot / jnp.maximum(nq * cand_norms[None, :], eps)
+    if measure == "jaccard":
+        n = jnp.matmul(mq, mc.T, **dot_kw)
+        union = jnp.sum(mq, -1)[:, None] + cand_counts[None, :] - n
+        return n / jnp.maximum(union, eps)
+    n = jnp.matmul(mq, mc.T, **dot_kw)
+    dot = jnp.matmul(vq, rc.T, **dot_kw)
+    sum_a = jnp.matmul(vq, mc.T, **dot_kw)
+    sum_b = jnp.matmul(mq, rc.T, **dot_kw)
+    sq_a = jnp.matmul(vq * vq, mc.T, **dot_kw)
+    sq_b = jnp.matmul(mq, (rc * rc).T, **dot_kw)
+    cov = n * dot - sum_a * sum_b
+    var_a = n * sq_a - sum_a * sum_a
+    var_b = n * sq_b - sum_b * sum_b
+    denom = jnp.sqrt(jnp.maximum(var_a, 0.0) * jnp.maximum(var_b, 0.0))
+    valid = (n >= 2) & (denom > eps)
+    pcc = jnp.clip(cov / jnp.maximum(denom, eps), -1.0, 1.0)
+    s = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
+    if measure == "pcc_sig":
+        s = s * (jnp.minimum(n, beta) / beta)
+    return s
+
+
+# -- fused support-scorer (shortlist SpMM) ------------------------------------
+
+def support_scores_ref(dev: jnp.ndarray, msk: jnp.ndarray,
+                       nb_idx: jnp.ndarray, nb_w: jnp.ndarray,
+                       q_means: jnp.ndarray) -> jnp.ndarray:
+    """(U, I) deviation/mask tables, (b, k) masked neighbor weights/ids →
+    (b, I) exact clipped predictions.  Oracle for
+    ``repro.kernels.support.fused_support_scores``; the same num/den
+    epilogue as the item index's support scorer and the tile predictor
+    (``nb_w`` must already be the masked weights — invalid neighbors at 0,
+    ids clipped into range)."""
+    rows_d = dev[nb_idx]                                   # (b, k, I)
+    rows_m = msk[nb_idx]
+    num = jnp.einsum("bk,bki->bi", nb_w, rows_d)
+    den = jnp.einsum("bk,bki->bi", nb_w, rows_m)
+    pred = q_means[:, None] + num / jnp.maximum(den, 1e-8)
+    pred = jnp.where(den > 1e-8, pred, q_means[:, None])
+    return jnp.clip(pred, 1.0, 5.0)
+
+
 # -- fused centroid distances -------------------------------------------------
 
 def centroid_distances_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:

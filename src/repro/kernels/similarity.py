@@ -44,7 +44,8 @@ def _dot_t(a, b):
         preferred_element_type=jnp.float32)
 
 
-def _sim_kernel(ra_ref, rb_ref, *refs, n_k: int, measures: Sequence[str]):
+def _sim_kernel(ra_ref, rb_ref, *refs, n_k: int, measures: Sequence[str],
+                beta: float = PCC_SIG_BETA):
     out_refs = refs[:len(measures)]
     (acc_n, acc_dot, acc_sa, acc_sb, acc_qa, acc_qb,
      acc_ca, acc_cb, acc_na, acc_nb) = refs[len(measures):]
@@ -91,8 +92,7 @@ def _sim_kernel(ra_ref, rb_ref, *refs, n_k: int, measures: Sequence[str]):
                 pcc = jnp.clip(cov / jnp.maximum(denom, _EPS), -1.0, 1.0)
                 pcc01 = jnp.where(valid, (pcc + 1.0) * 0.5, 0.0)
                 if measure == "pcc_sig":
-                    pcc01 = pcc01 * (jnp.minimum(n, PCC_SIG_BETA)
-                                     / PCC_SIG_BETA)
+                    pcc01 = pcc01 * (jnp.minimum(n, beta) / beta)
                 ref[...] = pcc01
 
 
@@ -106,14 +106,16 @@ def _pad_to(x, mult, axis):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "measure", "bm", "bn", "bk", "interpret"))
+    "measure", "bm", "bn", "bk", "interpret", "beta"))
 def fused_similarity(ra: jnp.ndarray, rb: jnp.ndarray, *,
                      measure: str = "all", bm: int = BM, bn: int = BN,
-                     bk: int = BK, interpret: bool = False):
+                     bk: int = BK, interpret: bool = False,
+                     beta: float = PCC_SIG_BETA):
     """All-pairs similarity between rating blocks via the fused kernel.
 
     ``ra``: (m, D), ``rb``: (n, D); returns (m, n) for a single measure or a
-    3-tuple (jaccard, cosine, pcc) for ``measure='all'``.
+    3-tuple (jaccard, cosine, pcc) for ``measure='all'``.  ``beta`` is the
+    ``pcc_sig`` significance horizon.
     """
     if measure != "all" and measure not in ALL_MEASURES:
         raise ValueError(f"unknown measure {measure!r}; want one of "
@@ -139,7 +141,8 @@ def fused_similarity(ra: jnp.ndarray, rb: jnp.ndarray, *,
                   pltpu.VMEM((1, bn_), jnp.float32)])
 
     kernel = pl.pallas_call(
-        functools.partial(_sim_kernel, n_k=grid[2], measures=measures),
+        functools.partial(_sim_kernel, n_k=grid[2], measures=measures,
+                          beta=float(beta)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
