@@ -19,6 +19,7 @@ trajectory is machine-readable across PRs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -27,6 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_SIZES = (2048, 8192, 32768)
+
+# sizes at which the shortlist stage is timed under both scan schedules
+# (symmetric-pair vs plain streaming) on the same fitted index — the
+# shortlist_speedup row CI asserts on
+SHORTLIST_SPEEDUP_SIZES = (8192, 32768)
 
 # per-size overrides: past ~10⁴ users the shortlist budget shrinks — the
 # neighbor lists concentrate, so a thinner exact rerank stays accurate
@@ -101,6 +107,16 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
         recall = _recall(exact_i, np.asarray(got_i))
         frac = stats.rerank_fraction
         speedup = exact_s / (fit_s + query_s)
+        # the stage timers must partition the reported query total — the
+        # accounting bug class this guards against is rerank work landing
+        # in the shortlist bucket (or falling out entirely) around the
+        # pass-1/pass-2 boundary
+        stage_gap = stats.seconds_total - (stats.seconds_shortlist
+                                           + stats.seconds_rerank)
+        assert -1e-6 <= stage_gap <= 0.1 * stats.seconds_total + 0.05, (
+            f"stage timers do not sum to the query total: "
+            f"{stats.seconds_shortlist} + {stats.seconds_rerank} vs "
+            f"{stats.seconds_total}")
         row = {
             "name": f"index_{measure}_U{n_users}",
             "us_per_call": query_s / n_users * 1e6,   # per-user query cost
@@ -118,9 +134,28 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
             # per-stage wall time: the rerank-stage split makes kernel /
             # batching wins directly visible across PRs
             "rerank_mode": stats.rerank_mode,
+            "scan_mode": stats.scan_mode,
             "shortlist_s": round(stats.seconds_shortlist, 3),
             "rerank_s": round(stats.seconds_rerank, 3),
+            "stage_total_s": round(stats.seconds_total, 3),
         }
+        if n_users in SHORTLIST_SPEEDUP_SIZES:
+            # shortlist-stage comparison on the same fitted index: the
+            # symmetric-pair scan vs the plain streaming scan (identical
+            # scores and selection — only the GEMM schedule changes)
+            index.cfg = dataclasses.replace(index.cfg,
+                                            scan_symmetric=False)
+            _, got_plain = index.query(ratings, means, k=k,
+                                       measure=measure)
+            plain = index.last_query
+            index.cfg = dataclasses.replace(index.cfg,
+                                            scan_symmetric=None)
+            row["shortlist_s_plain"] = round(plain.seconds_shortlist, 3)
+            row["shortlist_speedup"] = round(
+                plain.seconds_shortlist
+                / max(stats.seconds_shortlist, 1e-9), 3)
+            row["scan_parity"] = bool(np.array_equal(
+                np.asarray(got_i), np.asarray(got_plain)))
         if n_users in DUAL_MODE_SIZES:
             # time the other rerank formulation on the same fitted index
             other = "grouped" if stats.rerank_mode == "gather" else "gather"

@@ -75,6 +75,57 @@ def run():
                  "us_per_call": us_pal,
                  "derived": "correctness-mode timing (no Mosaic on CPU)"})
     rows += run_rerank_smoke(rng)
+    rows += run_select_smoke(rng)
+    return rows
+
+
+def run_select_smoke(rng, q_n: int = 48, n: int = 768, p: int = 32,
+                     m: int = 40):
+    """Verify + time the blockwise-select kernel and its XLA twin.
+
+    The kernel and the exact ``lax.top_k`` twin implement the canonical
+    ``(-score, id)`` selection, so their top-M id sets must equal the
+    jnp oracle's exactly — recall 1.0, pinned (CI fails loudly on any
+    regression).  The ``approx_max_k`` twin is reported for reference
+    under a separate key (it trades recall for the O(N) partial reduce
+    and is never used where the bit-parity contract applies).
+    """
+    from repro.kernels.ref import scan_topm_ref
+    from repro.kernels.select import fused_scan_topm, scan_topm_xla
+    q = jnp.asarray(rng.normal(size=(q_n, p)).astype(np.float32))
+    prox = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    q_ids = jnp.asarray(np.arange(q_n, dtype=np.int32))
+    want = np.asarray(scan_topm_ref(q, prox, q_ids, m)[1])
+
+    def recall(got):
+        return float(np.mean([len(set(got[r]) & set(want[r])) / m
+                              for r in range(q_n)]))
+
+    rows = []
+    us_k = _time(lambda: fused_scan_topm(q, prox, q_ids, m=m, bq=16,
+                                         bn=128, interpret=True), reps=2)
+    got_k = np.asarray(fused_scan_topm(q, prox, q_ids, m=m, bq=16,
+                                       bn=128, interpret=True)[1])
+    rows.append({"name": f"select_kernel_{q_n}x{n}_m{m}",
+                 "us_per_call": us_k,
+                 "recall_vs_oracle": recall(got_k),
+                 "derived": "interpret-mode (no Mosaic on CPU)"})
+    us_x = _time(lambda: scan_topm_xla(q, prox, q_ids, m=m), reps=5)
+    got_x = np.asarray(scan_topm_xla(q, prox, q_ids, m=m)[1])
+    rows.append({"name": f"select_xla_twin_{q_n}x{n}_m{m}",
+                 "us_per_call": us_x,
+                 "recall_vs_oracle": recall(got_x),
+                 "derived": "lax.top_k twin (exact)"})
+    got_a = np.asarray(scan_topm_xla(q, prox, q_ids, m=m,
+                                     approx=True)[1])
+    rows.append({"name": f"select_approx_twin_{q_n}x{n}_m{m}",
+                 "us_per_call": _time(lambda: scan_topm_xla(
+                     q, prox, q_ids, m=m, approx=True), reps=5),
+                 "approx_recall": recall(got_a),
+                 "derived": "approx_max_k twin (recall < 1 by design)"})
+    for tag, rec in (("kernel", recall(got_k)), ("xla", recall(got_x))):
+        assert rec >= 1.0, (f"select {tag} smoke: recall {rec} below "
+                            f"pinned floor 1.0")
     return rows
 
 

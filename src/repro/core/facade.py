@@ -276,6 +276,12 @@ class CFEngine:
         self._tot = None                             # (U,) rating sums
         self._snapshot: Optional[tuple] = None       # atomically-published
         self._gather_cache: Optional[tuple] = None   # int8 recommend operand
+        # ratings version counter: every update_ratings bumps it, and the
+        # derived per-ratings caches (the gather operand here, the CSR /
+        # pair-table / support caches inside the indexes) are delta-patched
+        # along the version chain instead of rebuilt wholesale — a
+        # 1-rating delta no longer pays an O(U·I) cache rebuild
+        self.ratings_version = 0
         self.fit_seconds = 0.0
         self.last_update: Optional[UpdateStats] = None
 
@@ -396,9 +402,11 @@ class CFEngine:
                                       values[keep])
 
         touched = np.unique(user_ids)
+        prev_ratings = self.ratings
         self.ratings = self.ratings.at[jnp.asarray(user_ids),
                                        jnp.asarray(item_ids)].set(
                                            jnp.asarray(values))
+        self.ratings_version += 1
 
         # 1. refold the touched rows' sufficient statistics
         s_pad = _bucket(len(touched), self.n_users)
@@ -407,11 +415,21 @@ class CFEngine:
         pad_touch_j = jnp.asarray(pad_touch)
         self._cnt, self._tot, self.means = _refold_stats(
             self.ratings, self._cnt, self._tot, pad_touch_j)
+        # delta-patch the recommend gather operand along the version chain
+        # (copy-on-write: concurrent snapshot readers keep the old operand)
+        if self._gather_cache is not None and \
+                self._gather_cache[0] is prev_ratings:
+            self._gather_cache = (self.ratings, pred_mod.patch_gather_source(
+                self._gather_cache[1], self.ratings, pad_touch_j))
+        else:
+            self._gather_cache = None
         if self.neighbor_mode == "approx":
-            self.index.refold(self.ratings, self.means, touched)
+            self.index.refold(self.ratings, self.means, touched,
+                              version=self.ratings_version)
         if self.item_index is not None:
             self.item_index.refold(self.ratings, self.means, touched,
-                                   np.unique(item_ids))
+                                   np.unique(item_ids),
+                                   version=self.ratings_version)
 
         # the pallas backend's scores carry the fused kernel's rounding; the
         # XLA-scored repair path would mix incomparable floats into the

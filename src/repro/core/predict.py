@@ -58,6 +58,38 @@ def make_gather_source(ratings: jnp.ndarray) -> jnp.ndarray:
             else ratings)
 
 
+@jax.jit
+def _scatter_rows_int8(src, rows, vals):
+    # no buffer donation: a concurrent reader (the serving batcher) may
+    # still hold the pre-delta operand mid-call — the patch must be
+    # copy-on-write like every other published model array
+    return src.at[rows].set(vals.astype(jnp.int8), mode="drop")
+
+
+def patch_gather_source(src: jnp.ndarray, ratings: jnp.ndarray,
+                        touched: jnp.ndarray) -> jnp.ndarray:
+    """Refresh a cached :func:`make_gather_source` result for a row delta.
+
+    ``src`` must be the cached operand of the *pre-delta* matrix and
+    ``ratings`` the post-delta matrix whose only changed rows are
+    ``touched`` (ids may be padded with out-of-range values — the scatter
+    drops them).  Touched rows are re-checked for int8 exactness and
+    scattered into a fresh copy (copy-on-write — the pre-delta operand
+    stays valid for concurrent readers), so a small delta skips the
+    full-matrix cast + exactness scan a cold rebuild pays.  A delta that
+    breaks int8 exactness falls back to a full rebuild.
+    """
+    if src.dtype != jnp.int8:
+        # non-int8 source is the rating matrix itself: the fresh matrix
+        # *is* the patched operand (a delta could newly qualify for int8,
+        # but staying f32 is always correct — the next cold build decides)
+        return ratings
+    rows = ratings[jnp.clip(touched, 0, ratings.shape[0] - 1)]
+    if not bool(_int8_exact(rows)):
+        return make_gather_source(ratings)
+    return _scatter_rows_int8(src, touched, rows)
+
+
 def _tile_predict(w, nbr, nb_means, query_means):
     """Shared per-tile epilogue — the exact arithmetic of the one-shot
     form restricted to one item tile (the item axis is embarrassingly

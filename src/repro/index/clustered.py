@@ -74,7 +74,29 @@ try:                # optional host fast path for the proxy scan: torch's
 except ImportError:  # pragma: no cover - container ships torch
     _torch = None
 
+try:                # survivor grouping in the symmetric scan: scipy's
+                    # COO→CSR is the O(n) counting sort (np.lexsort
+                    # fallback below when absent)
+    import scipy.sparse as _scipy_sparse
+except ImportError:  # pragma: no cover - container ships scipy
+    _scipy_sparse = None
+
 RERANK_MODES = ("auto", "gather", "grouped")
+SCAN_MODES = ("auto", "pool", "cluster", "kernel")
+
+# symmetric-pair scan: each unordered query-block pair's P·Pᵀ GEMM runs
+# once and is consumed for both sides while cache-resident (half the
+# proxy-GEMM FLOPs, no O(U²) score buffer).  The per-row thresholds are
+# oversampled so the expected survivor count is _SYM_OVERSAMPLE·M; the
+# survivor arrays are ~that many (id, val, row) entries per query, and
+# the path gates on this byte budget.
+_SYM_OVERSAMPLE = 1.5
+_SYM_MAX_BYTES = 8 << 30
+# symmetric scan pays off where the threshold filter is selective: at
+# rerank budgets past this fraction of the pool the survivor mass stops
+# filtering (≥ ~10% of every score block survives) and the plain
+# streaming top-M wins; cfg.scan_symmetric=True overrides for tests
+_SYM_FRAC_MAX = 0.06
 
 # gather-mode rerank: queries per device call (block) — large blocks
 # amortise per-call dispatch/sort overhead; the byte budget bounds the
@@ -136,6 +158,30 @@ class IndexConfig:
     #               to the bucketed walk — see BENCH_index.json).
     rerank_mode: str = "auto"
     rerank_batch: int = 256               # grouped-mode queries per union
+    # shortlist-selection scan strategy (see README's scan-mode matrix):
+    #   "pool"    — dense proxy scan over the whole candidate pool (host
+    #               GEMM + canonical top-M; the symmetric-pair variant
+    #               when the query set is the full population), with the
+    #               block-union gather scan as the fallback when probing
+    #               does not saturate the pool;
+    #   "cluster" — cluster-restricted scan: each query block scores only
+    #               its probed clusters' member proxies through padded
+    #               per-cluster tables (no per-block set algebra over
+    #               member lists, no full-pool score matrix);
+    #   "kernel"  — accelerator path: the fused Pallas blockwise-select
+    #               kernel (kernels/select.py) scans the full pool and
+    #               selects top-M on device — scores never round-trip to
+    #               the host (the exact lax.top_k twin off-TPU);
+    #   "auto"    — kernel where the fused kernels run (TPU), else by
+    #               probe fraction: pool when n_probe·spill ≥ n_clusters
+    #               (the probed union provably saturates), cluster below.
+    # All modes implement the same canonical (-score, id) selection, so
+    # shortlists are bit-identical wherever the candidate pools coincide.
+    shortlist_scan_mode: str = "auto"
+    # symmetric-pair scan override: None → auto (on for full-population
+    # pool scans within the O(U²) buffer budget), False → always the
+    # plain streaming scan, True → force (still budget/population gated).
+    scan_symmetric: Optional[bool] = None
     # auto-refit drift guard: when the cumulative fraction of rows whose
     # spill list changed since the last cold fit crosses this, refold
     # performs a fresh k-means fit (0 disables).  refold keeps assignments
@@ -153,8 +199,15 @@ class QueryStats:
     n_probed: int          # probed-member rows summed over queries
     n_reranked: int        # rows exactly reranked (true similarity)
     seconds_shortlist: float = 0.0   # probe + proxy scan + selection
-    seconds_rerank: float = 0.0      # exact rerank stage
+    seconds_rerank: float = 0.0      # exact rerank stage (including the
+                                     # unfiltered blocks' shared-matmul
+                                     # rerank, which is rerank work even
+                                     # though it runs during pass 1)
+    seconds_total: float = 0.0       # whole-call wall time; the stage
+                                     # timers partition it (pinned by the
+                                     # benchmark's stage-sum check)
     rerank_mode: str = ""            # resolved mode ("gather" | "grouped")
+    scan_mode: str = ""              # resolved shortlist scan mode
 
     def _frac(self, total: int) -> float:
         pairs = self.n_queries * max(self.n_users - 1, 1)
@@ -180,6 +233,9 @@ class RefoldStats:
     n_full_rows: int       # rows needing a full distance row
     n_certified: int       # rows kept/merged by the cheap certificate
     reassigned_frac: float = 0.0   # cumulative reassigned/rows since fit
+    caches_patched: int = 0        # derived per-ratings caches refreshed
+                                   # in place by the delta (vs rebuilt
+                                   # from scratch on next use)
     refit: bool = False            # this call crossed the drift threshold
                                    # and performed a cold refit
     profile_refold: bool = False   # item index only: this call re-folded
@@ -253,16 +309,119 @@ def _argpartition_rows(sp: np.ndarray, m: int) -> np.ndarray:
     Partitions the *upper* side in place of negating the matrix first —
     at shortlist scale the score matrix is hundreds of MB, and the
     negation pass alone used to cost seconds at CPU memory bandwidth.
+    Returns the selected column ids (tie order at the cut is whatever
+    introselect leaves — callers needing the canonical tie set go through
+    :func:`_topm_rows`).  ``m >= width`` selects every column; empty and
+    single-row inputs skip the thread split.
     """
-    kth = sp.shape[1] - m
-    if sp.shape[0] < 64:
+    n, w = sp.shape
+    if m >= w:
+        return np.broadcast_to(np.arange(w), (n, w)).copy()
+    kth = w - m
+    if n < 64:
         return np.argpartition(sp, kth, axis=1)[:, kth:]
     from concurrent.futures import ThreadPoolExecutor
-    half = sp.shape[0] // 2
+    half = n // 2
     with ThreadPoolExecutor(max_workers=2) as pool:
         top = pool.submit(np.argpartition, sp[:half], kth, 1)
         bot = np.argpartition(sp[half:], kth, axis=1)
         return np.concatenate([top.result()[:, kth:], bot[:, kth:]], axis=0)
+
+
+def _topm_rows(sp: np.ndarray, m: int,
+               col_ids: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonical row-wise top-``m``: ``(values, column ids)``, selection
+    set under the exact engines' ``(-score, id)`` order.
+
+    The fast paths (torch ``topk``, the threaded numpy argpartition) pick
+    an *arbitrary* subset of a tie group straddling the selection cut, so
+    both are followed by a boundary repair: rows whose cut value also
+    appears just below the cut are re-selected canonically — everything
+    strictly above the cut stays, and the tie group contributes its
+    lowest candidate ids (``col_ids`` maps columns to candidate ids when
+    the column order is not already ascending-by-id, e.g. the
+    cluster-restricted scan's cluster-major candidate layout).  This is
+    what makes every shortlist scan mode (host torch/numpy, the Pallas
+    select kernel, the lax.top_k twin) produce bit-identical shortlists.
+    ``-inf`` (knockout) columns may be selected when a row has fewer than
+    ``m`` finite scores; callers map them to their padding id.
+    ``m >= width`` returns every column.  Output order within the
+    selection is unspecified (callers sort the shortlists ascending
+    downstream).
+    """
+    n, w = sp.shape
+    if m >= w:
+        ids = np.broadcast_to(np.arange(w), (n, w)).copy()
+        return sp.copy(), ids
+    if m == 0:
+        return (np.empty((n, 0), np.float32), np.empty((n, 0), np.int64))
+    if _torch is not None and n:
+        sp_t = sp if isinstance(sp, _torch.Tensor) else _torch.from_numpy(sp)
+        v1, i1 = _torch.topk(sp_t, m + 1, dim=1, sorted=True)
+        v1, i1 = v1.numpy(), i1.numpy()
+        selv, sel = v1[:, :m].copy(), i1[:, :m].astype(np.int64)
+        cut, below = v1[:, m - 1], v1[:, m]
+    else:
+        sel1 = _argpartition_rows(sp, m + 1)                  # (n, m+1)
+        v1 = np.take_along_axis(sp, sel1, 1)
+        drop = v1.argmin(axis=1)                              # (m+1)-th best
+        below = v1[np.arange(n), drop]
+        keep = np.arange(m + 1)[None, :] != drop[:, None]
+        sel = sel1[keep].reshape(n, m)
+        selv = v1[keep].reshape(n, m)
+        cut = selv.min(axis=1) if m else below
+    # canonical boundary repair: only rows where the cut value is tied
+    # across the selection boundary need the full-row pass (rare — exact
+    # score ties, e.g. duplicate users or zero-overlap knockouts)
+    need = np.nonzero((below == cut) & np.isfinite(cut))[0]
+    for row in need:
+        above = np.nonzero(sp[row] > cut[row])[0]
+        tied = np.nonzero(sp[row] == cut[row])[0]
+        if col_ids is not None:       # canonical order is by candidate id
+            tied = tied[np.argsort(col_ids[tied], kind="stable")]
+        tied = tied[:m - len(above)]
+        sel[row, :len(above)] = above
+        sel[row, len(above):len(above) + len(tied)] = tied
+        selv[row] = sp[row, sel[row]]
+    return selv, sel
+
+
+def _patch_csr(csr, touched: np.ndarray, rows_new: np.ndarray):
+    """Row-splice a host CSR for a rating delta: ``touched`` (sorted
+    unique row ids) get fresh rows from the dense ``rows_new`` (T, I)
+    slab; every untouched row's span is bulk-copied.  O(nnz) memcpy per
+    delta instead of the full ``np.nonzero`` matrix scan a cold rebuild
+    pays — the delta-aware replacement for wholesale identity
+    invalidation."""
+    indptr, indices, data = csr
+    n_rows = len(indptr) - 1
+    rr, cc = np.nonzero(rows_new)
+    t_lens = np.bincount(rr, minlength=len(touched)).astype(np.int64)
+    t_off = np.cumsum(t_lens) - t_lens
+    t_vals = rows_new[rr, cc].astype(data.dtype)
+    counts = np.diff(indptr)
+    counts[touched] = t_lens
+    indptr_new = np.zeros(n_rows + 1, np.int64)
+    np.cumsum(counts, out=indptr_new[1:])
+    idx_new = np.empty(indptr_new[-1], indices.dtype)
+    data_new = np.empty(indptr_new[-1], data.dtype)
+    prev = 0
+    for t_pos, t in enumerate(touched):
+        if t > prev:        # bulk-copy the untouched run [prev, t)
+            idx_new[indptr_new[prev]:indptr_new[t]] = \
+                indices[indptr[prev]:indptr[t]]
+            data_new[indptr_new[prev]:indptr_new[t]] = \
+                data[indptr[prev]:indptr[t]]
+        lo, n = indptr_new[t], t_lens[t_pos]
+        src = slice(t_off[t_pos], t_off[t_pos] + n)
+        idx_new[lo:lo + n] = cc[src].astype(indices.dtype)
+        data_new[lo:lo + n] = t_vals[src]
+        prev = t + 1
+    if prev < n_rows:
+        idx_new[indptr_new[prev]:] = indices[indptr[prev]:]
+        data_new[indptr_new[prev]:] = data[indptr[prev]:]
+    return indptr_new, idx_new, data_new
 
 
 @jax.jit
@@ -443,6 +602,10 @@ class _SpillClusterCore:
         if getattr(cfg, "rerank_mode", "auto") not in RERANK_MODES:
             raise ValueError(f"unknown rerank_mode {cfg.rerank_mode!r}; "
                              f"want one of {RERANK_MODES}")
+        if getattr(cfg, "shortlist_scan_mode", "auto") not in SCAN_MODES:
+            raise ValueError(
+                f"unknown shortlist_scan_mode {cfg.shortlist_scan_mode!r}; "
+                f"want one of {SCAN_MODES}")
         self.cfg = cfg
         self.mesh = mesh              # k-means fit shards over this mesh
         self.mesh_axis = mesh_axis
@@ -464,6 +627,14 @@ class _SpillClusterCore:
         self._csr_cache: Optional[tuple] = None        # per-ratings CSR
         self._proxies_np_cache: Optional[tuple] = None # per-proxies host copy
         self._short_buf = None                         # torch GEMM output
+        # ratings version chain for delta-aware cache maintenance: caches
+        # above are keyed by array identity; ``refold`` advances the chain
+        # and *patches* caches keyed to the previous array in place of the
+        # wholesale invalidation an identity miss implies (see
+        # ``_patch_row_caches``)
+        self._ratings_key = None          # the array the caches track
+        self._ratings_version = 0         # bumped by every refold
+        self._member_table_cache = None   # padded per-cluster scan tables
 
     def _ratings_csr(self, ratings):
         """Host CSR view of the rating matrix (indptr, indices, data) —
@@ -497,6 +668,23 @@ class _SpillClusterCore:
             b = _bucket(nnz)
         return min(b, n_items)
 
+    @staticmethod
+    def _bucket_table(indptr, indices, data, rows, b):
+        """One padded (len(rows), b) item/value table sliced out of the
+        CSR arrays (vectorized variable-length row copy)."""
+        items = np.zeros((len(rows), b), np.int32)
+        vals = np.zeros((len(rows), b), np.float32)
+        lens = (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+        total = int(lens.sum())
+        if total:
+            dst_row = np.repeat(np.arange(len(rows)), lens)
+            off = np.cumsum(lens) - lens
+            dst_col = np.arange(total) - np.repeat(off, lens)
+            src = np.arange(total) + np.repeat(indptr[rows] - off, lens)
+            items[dst_row, dst_col] = indices[src]
+            vals[dst_row, dst_col] = data[src]
+        return jnp.asarray(items), jnp.asarray(vals)
+
     def _item_tables(self, ratings):
         """Device-resident padded per-user item/value tables, bucketed by
         rated-item support — the walk-side operands of the pair-major
@@ -517,18 +705,8 @@ class _SpillClusterCore:
         for b in np.unique(bucket_of):
             rows = np.nonzero(bucket_of == b)[0]
             local_of[rows] = np.arange(len(rows))
-            items = np.zeros((len(rows), b), np.int32)
-            vals = np.zeros((len(rows), b), np.float32)
-            lens = nnz[rows]
-            total = int(lens.sum())
-            if total:
-                dst_row = np.repeat(np.arange(len(rows)), lens)
-                off = np.cumsum(lens) - lens
-                dst_col = np.arange(total) - np.repeat(off, lens)
-                src = np.arange(total) + np.repeat(indptr[rows] - off, lens)
-                items[dst_row, dst_col] = indices[src]
-                vals[dst_row, dst_col] = data[src]
-            tables[int(b)] = (jnp.asarray(items), jnp.asarray(vals))
+            tables[int(b)] = self._bucket_table(indptr, indices, data,
+                                                rows, int(b))
         out = (bucket_of, local_of, tables)
         self._csr_cache = (ratings, self._csr_cache[1], out)
         return out
@@ -555,6 +733,92 @@ class _SpillClusterCore:
         src = pred_mod.make_gather_source(ratings)
         self._gather_cache = (ratings, src)
         return src
+
+    # -- delta-aware cache maintenance -------------------------------------
+    def _patch_row_caches(self, ratings, touched: np.ndarray,
+                          version: Optional[int], means=None) -> int:
+        """Advance the ratings version chain and delta-patch the derived
+        per-ratings caches (gather source, CSR, pair tables) for a row
+        delta, in place of the wholesale rebuild an identity miss forces.
+
+        ``touched``: sorted unique changed row ids of the *row axis the
+        caches are keyed on* (users — both indexes derive their rerank
+        operands from user rows).  ``version``: the caller's ratings
+        version counter; when provided it must be exactly one past the
+        version this core last saw, else the chain is broken (an unknown
+        number of deltas passed by) and every cache is dropped.  Returns
+        the number of caches patched.
+        """
+        old = self._ratings_key
+        chain_ok = (old is not None and ratings is not old
+                    and (version is None
+                         or version == self._ratings_version + 1))
+        self._ratings_key = ratings
+        self._ratings_version = (version if version is not None
+                                 else self._ratings_version + 1)
+        if not chain_ok:
+            if ratings is not old:
+                self._gather_cache = None
+                self._csr_cache = None
+                self._drop_extra_row_caches()
+            return 0
+        patched = 0
+        touched_j = jnp.asarray(touched)
+        if self._gather_cache is not None and self._gather_cache[0] is old:
+            self._gather_cache = (ratings, pred_mod.patch_gather_source(
+                self._gather_cache[1], ratings, touched_j))
+            patched += 1
+        else:
+            self._gather_cache = None
+        if self._csr_cache is not None and self._csr_cache[0] is old:
+            rows_new = np.asarray(ratings[touched_j])
+            csr = _patch_csr(self._csr_cache[1], touched, rows_new)
+            entry = (ratings, csr)
+            patched += 1
+            if len(self._csr_cache) > 2:
+                entry = entry + (self._patch_item_tables(
+                    self._csr_cache[2], csr, touched, ratings.shape[1]),)
+                patched += 1
+            self._csr_cache = entry
+        else:
+            self._csr_cache = None
+        patched += self._patch_extra_row_caches(ratings, means, touched,
+                                                old)
+        return patched
+
+    def _patch_item_tables(self, old_tables, csr, touched: np.ndarray,
+                           n_items: int):
+        """Refresh the bucketed pair tables for a row delta: only buckets
+        holding a touched row (before or after its support moved) are
+        rebuilt from the patched CSR; every other bucket's device tables
+        are reused untouched."""
+        bucket_of, local_of, tables = old_tables
+        indptr, indices, data = csr
+        nnz_t = (indptr[touched + 1] - indptr[touched]).astype(np.int64)
+        new_b = np.array([self._rerank_bucket(max(int(v), 1), n_items)
+                          for v in nnz_t], np.int32)
+        affected = np.unique(np.concatenate([bucket_of[touched], new_b]))
+        bucket_of = bucket_of.copy()
+        bucket_of[touched] = new_b
+        local_of = local_of.copy()
+        tables = dict(tables)
+        for b in affected:
+            rows = np.nonzero(bucket_of == b)[0]
+            if not len(rows):
+                tables.pop(int(b), None)
+                continue
+            local_of[rows] = np.arange(len(rows))
+            tables[int(b)] = self._bucket_table(indptr, indices, data,
+                                                rows, int(b))
+        return bucket_of, local_of, tables
+
+    def _patch_extra_row_caches(self, ratings, means, touched: np.ndarray,
+                                old) -> int:
+        """Subclass hook: delta-patch caches the core does not own."""
+        return 0
+
+    def _drop_extra_row_caches(self) -> None:
+        """Subclass hook: wholesale invalidation on a broken chain."""
 
     # -- resolution --------------------------------------------------------
     @property
@@ -583,7 +847,11 @@ class _SpillClusterCore:
         """``n_clusters``/``n_probe`` auto values against ``n_rows``."""
         c = self.cfg.n_clusters or int(np.ceil(np.sqrt(self.n_rows)))
         self.n_clusters = max(1, min(c, self.n_rows))
-        self.n_probe = self.cfg.n_probe or max(1, self.n_clusters // 2)
+        # half the clusters, rounded *up*: with the default spill of 2
+        # this keeps n_probe·spill ≥ C at odd C too, so the auto config
+        # rides the provable pool-saturation shortcut instead of falling
+        # just short of it (C//2 at C=91 probed 45 — one shy)
+        self.n_probe = self.cfg.n_probe or max(1, -(-self.n_clusters // 2))
         self.n_probe = min(self.n_probe, self.n_clusters)
 
     def _fit_clusters(self) -> None:
@@ -621,6 +889,7 @@ class _SpillClusterCore:
         flat, rows = flat[order], rows[order]
         splits = np.searchsorted(flat, np.arange(1, self.n_clusters))
         self._members = list(np.split(rows, splits))
+        self._member_table_cache = None      # padded scan tables are stale
 
     # -- incremental maintenance (shared core) -----------------------------
     def _refold_rows(self, touched: np.ndarray, p_new_j: jnp.ndarray
@@ -644,7 +913,20 @@ class _SpillClusterCore:
         #    step 4 re-homes any mass whose primary moved
         p_old = np.asarray(self.proxies[jnp.asarray(touched)])
         p_new = np.asarray(p_new_j)
+        if self._proxies_np_cache is not None and \
+                self._proxies_np_cache[0] is self.proxies:
+            # delta-patch the host proxy copy alongside the device update
+            # (the array identity changes below, which would otherwise
+            # force a full device→host round-trip on the next scan).
+            # Copy-on-write like every published operand: a concurrent
+            # reader mid-scan keeps the pre-delta table
+            p_host = self._proxies_np_cache[1].copy()
+            p_host[touched] = p_new
+        else:
+            p_host = None
         self.proxies = self.proxies.at[jnp.asarray(touched)].set(p_new_j)
+        if p_host is not None:
+            self._proxies_np_cache = (self.proxies, p_host)
         a_old = self.assign[touched].copy()
         np.add.at(self._sums, a_old, -p_old)
         np.add.at(self._counts, a_old, -1)
@@ -864,6 +1146,7 @@ class ClusteredIndex(_SpillClusterCore):
             means: Optional[jnp.ndarray] = None) -> "ClusteredIndex":
         """Project, cluster, and spill-assign the users of ``ratings``."""
         ratings = jnp.asarray(ratings, jnp.float32)
+        self._ratings_key = ratings          # (re)anchor the version chain
         self.n_rows, n_items = ratings.shape
         if means is None:
             means = sim.user_stats(ratings)[2]
@@ -899,6 +1182,311 @@ class ClusteredIndex(_SpillClusterCore):
         return ("grouped" if max_rerank >= self._GROUPED_FRAC * self.n_rows
                 else "gather")
 
+    # -- shortlist scan ----------------------------------------------------
+    def _scan_mode(self, n_probe: int) -> str:
+        """Resolve ``cfg.shortlist_scan_mode`` (see IndexConfig): the
+        fused select kernel where the accelerator kernels run, else by
+        probe fraction — the dense pool scan when probing saturates the
+        candidate pool (``n_probe·spill ≥ C``: every user's spill list
+        intersects the probes), the cluster-restricted scan below."""
+        mode = self.cfg.shortlist_scan_mode
+        if mode != "auto":
+            return mode
+        if self._use_kernel():
+            return "kernel"
+        # the cluster-restricted scan touches ~(n_probe/C)·spill·U table
+        # slots per query block where the pool scan touches U, so it only
+        # wins at genuinely thin probe fractions — at or near saturation
+        # it would do up to spill× the pool's work
+        if 2 * n_probe * self.spill_ids.shape[1] <= self.n_clusters:
+            return "cluster"
+        return "pool"
+
+    def _member_table(self) -> np.ndarray:
+        """Padded per-cluster member-id table, (C, Lmax) int32 with
+        ``n_rows`` padding — the cluster-restricted scan's candidate
+        source (rebuilt lazily after any spill reassignment)."""
+        if self._member_table_cache is None:
+            lmax = max(int(self.member_counts().max()), 1)
+            tbl = np.full((self.n_clusters, lmax), self.n_rows, np.int32)
+            for c, mem in enumerate(self._members):
+                tbl[c, :len(mem)] = mem
+            self._member_table_cache = tbl
+        return self._member_table_cache
+
+    def _proxy_gemm(self, q_c: np.ndarray, b_c: np.ndarray,
+                    reuse_buf: bool = False):
+        """Host proxy-score GEMM ``q_c @ b_cᵀ`` — torch ``mm`` when
+        available (multithreaded), numpy otherwise."""
+        if _torch is None:
+            return q_c @ b_c.T
+        nv = len(q_c)
+        if reuse_buf:
+            if self._short_buf is None or \
+                    self._short_buf.shape[1] != len(b_c) or \
+                    self._short_buf.shape[0] < nv:
+                self._short_buf = _torch.empty(nv, len(b_c),
+                                               dtype=_torch.float32)
+            out = self._short_buf[:nv]
+        else:
+            out = _torch.empty(nv, len(b_c), dtype=_torch.float32)
+        _torch.mm(_torch.from_numpy(np.ascontiguousarray(q_c)),
+                  _torch.from_numpy(b_c).T, out=out)
+        return out.numpy()          # shared-memory view
+
+    def _scan_dense_block(self, p_np: np.ndarray, ids: np.ndarray,
+                          cand: Optional[np.ndarray],
+                          max_rerank: int) -> np.ndarray:
+        """Dense proxy scan of one query block: one host GEMM against the
+        full pool (``cand is None`` — the pool shortcut) or a gathered
+        candidate union (the legacy fallback when probing does not
+        saturate), then the canonical top-M (``_topm_rows``: the torch
+        ``topk`` / threaded-introselect fast path with the tie-boundary
+        repair, so the selection set matches the exact engines'
+        ``(-score, id)`` policy bit for bit)."""
+        nv = len(ids)
+        pool_all = cand is None
+        q_c = np.ascontiguousarray(p_np[ids])
+        b_c = p_np if pool_all else np.ascontiguousarray(p_np[cand])
+        sp = self._proxy_gemm(q_c, b_c, reuse_buf=True)
+        if pool_all:                # self-pair knockout
+            sp[np.arange(nv), ids] = -np.inf
+        else:
+            at = np.searchsorted(cand, ids)
+            hit = np.nonzero((at < len(cand))
+                             & (cand[np.minimum(at, len(cand) - 1)]
+                                == ids))[0]
+            sp[hit, at[hit]] = -np.inf
+        selv, sel = _topm_rows(sp, max_rerank)
+        picked = sel if pool_all else cand[sel]
+        return np.where(selv == -np.inf, self.n_users,
+                        picked).astype(np.int32)
+
+    def _scan_cluster_block(self, p_np: np.ndarray, ids: np.ndarray,
+                            clusters: np.ndarray, max_rerank: int
+                            ) -> Tuple[np.ndarray, int]:
+        """Cluster-restricted scan of one query block: score only the
+        probed clusters' member proxies through the padded member table —
+        no per-block set algebra over member lists and no full-pool score
+        matrix.  Spill duplicates are knocked out by the canonical
+        ownership rule (a member scores from the *first probed* cluster
+        of its spill list), so the candidate set equals the block's
+        probed-cluster union exactly and the canonical top-M matches the
+        dense scan's wherever the pools coincide.  Returns the (nv, M)
+        shortlist and the scanned-slot count."""
+        n = self.n_users
+        tbl = self._member_table()[clusters]              # (ncl, Lmax)
+        flat = tbl.reshape(-1)
+        sp_l = self.spill_ids[np.minimum(flat, n - 1)]    # (F, spill)
+        probed = np.zeros(self.n_clusters, bool)
+        probed[clusters] = True
+        first = sp_l[np.arange(len(flat)), probed[sp_l].argmax(axis=1)]
+        own = np.repeat(clusters.astype(np.int32), tbl.shape[1])
+        cand = flat[(flat < n) & (first == own)]          # dup-free union
+        sp = self._proxy_gemm(np.ascontiguousarray(p_np[ids]),
+                              np.ascontiguousarray(p_np[cand]))
+        inv = np.full(n, -1, np.int64)                    # self knockout
+        inv[cand] = np.arange(len(cand))
+        at = inv[ids]
+        hit = np.nonzero(at >= 0)[0]
+        sp[hit, at[hit]] = -np.inf
+        selv, sel = _topm_rows(sp, min(max_rerank, len(cand)),
+                               col_ids=cand)
+        short = np.where(selv == -np.inf, n, cand[sel]).astype(np.int32)
+        if short.shape[1] < max_rerank:
+            short = np.pad(short,
+                           ((0, 0), (0, max_rerank - short.shape[1])),
+                           constant_values=n)
+        return short, len(cand)
+
+    def _scan_kernel_block(self, ids_pad: np.ndarray, nv: int,
+                           max_rerank: int) -> np.ndarray:
+        """Device shortlist scan of one query block: the fused Pallas
+        blockwise-select kernel (proxy GEMM + canonical top-M in one VMEM
+        pass — scores never round-trip to the host) where the kernels
+        run, the exact ``lax.top_k`` twin elsewhere.  Both implement the
+        canonical ``(-score, id)`` selection, pinned against
+        ``ref.select_topm_ref``."""
+        from repro.kernels import select as sel_mod
+        m = min(max_rerank, self.n_users)
+        ids_j = jnp.asarray(ids_pad)
+        q = self.proxies[jnp.clip(ids_j, 0, self.n_users - 1)]
+        if self._use_kernel() or self.cfg.interpret:
+            v, i = sel_mod.fused_scan_topm(q, self.proxies, ids_j, m=m,
+                                           interpret=self.cfg.interpret)
+        else:
+            v, i = sel_mod.scan_topm_xla(q, self.proxies, ids_j, m=m)
+        v = np.asarray(v)[:nv]
+        short = np.where(np.isneginf(v), self.n_users,
+                         np.asarray(i)[:nv]).astype(np.int32)
+        if short.shape[1] < max_rerank:
+            short = np.pad(short,
+                           ((0, 0), (0, max_rerank - short.shape[1])),
+                           constant_values=self.n_users)
+        return short
+
+    def _use_symmetric(self, n_queries: int, max_rerank: int) -> bool:
+        """Symmetric-pair scan applicability: full-population query set
+        (every unordered pair is needed on both sides, so each block
+        GEMM serves two query blocks), a *thin* rerank budget (the
+        threshold filter passes ~1.5·M/U of each score block — at fat
+        budgets the survivors stop being a filter and the plain top-M
+        pass wins), and the survivor-array memory budget."""
+        if self.cfg.scan_symmetric is False:
+            return False
+        if n_queries != self.n_users:
+            return False
+        if max_rerank > _SYM_FRAC_MAX * self.n_users \
+                and self.cfg.scan_symmetric is not True:
+            return False
+        return (_SYM_OVERSAMPLE * max_rerank * self.n_users * 12
+                <= _SYM_MAX_BYTES)
+
+    def _scan_symmetric(self, p_np: np.ndarray, max_rerank: int,
+                        bq: int) -> np.ndarray:
+        """Symmetric-pair full-population proxy scan with fused
+        threshold selection.
+
+        Proxy affinity is symmetric (``P·Pᵀ``), yet the plain pool scan
+        computes every unordered pair twice — once per side.  Here each
+        unordered query-block pair's GEMM runs once and the block is
+        consumed for *both* sides while cache-resident, cutting
+        proxy-GEMM FLOPs in half and replacing the full-width top-M
+        passes with cheap vectorized threshold filters:
+
+        1. **Thresholds** — each diagonal block doubles as a uniform
+           population sample (user ids carry no taste order): a row's
+           ``tau`` is its block-local rank-``ks`` score, with ``ks``
+           oversampled so the expected full-row survivor count is
+           ``~1.5·M``.
+        2. **Survivor extraction** — every pair block contributes its
+           entries ``> tau`` to both row sides via row-major compare +
+           ``flatnonzero`` + gather (no transposes, no strided passes,
+           no O(U²) score buffer).
+        3. **Assembly + exact select** — per row block, one COO→CSR
+           counting sort groups the survivors by row in ascending
+           candidate-id order, and the canonical top-M (``_topm_rows``)
+           runs over the narrow padded survivor table.
+
+        Exactness certificate: a row with ≥ M survivors has its M-th
+        best score strictly above ``tau``, so the canonical top-M over
+        its survivors *is* the canonical top-M over the full row — bit
+        against the plain scan's selection (ties at the cut included:
+        they are all > tau).  Rows with < M survivors (sampling-noise
+        tail, ~0.1 %) are recomputed exactly through the dense scan.
+        Returns the (U, M) shortlist table.
+        """
+        n = self.n_users
+        m = max_rerank
+        bq = min(bq, n)
+        nb = -(-n // bq)
+        use_t = _torch is not None
+        pt = _torch.from_numpy(p_np) if use_t else None
+        scr_t = _torch.empty(bq, bq) if use_t else None
+        scr = scr_t.numpy() if use_t else np.empty((bq, bq), np.float32)
+        taus = np.empty(n, np.float32)
+        tri: List[list] = [[] for _ in range(nb)]   # (rows, cols, vals)
+
+        def mm_block(i0, i1, j0, j1):
+            if use_t:
+                view = scr_t[:i1 - i0, :j1 - j0]
+                _torch.mm(pt[i0:i1], pt[j0:j1].t(), out=view)
+                return view.numpy()
+            view = scr[:i1 - i0, :j1 - j0]
+            np.matmul(p_np[i0:i1], p_np[j0:j1].T, out=view)
+            return view
+
+        def collect(dst, s, mask, col0, transpose):
+            """Append ``mask`` survivors of block ``s`` to row side
+            ``dst`` (``transpose``: the entries' columns are the dst
+            block's rows — pair block consumed for its second side)."""
+            flat = np.flatnonzero(mask)
+            if not len(flat):
+                return
+            vals = s.reshape(-1)[flat]
+            r, c = np.divmod(flat, s.shape[1])
+            if transpose:
+                r, c = c, r
+            tri[dst].append((r.astype(np.int32),
+                             (col0 + c).astype(np.int32), vals))
+
+        # phase 1 — diagonal blocks: thresholds + own survivors
+        ks = max(1, int(_SYM_OVERSAMPLE * m * bq / n))
+        for bi in range(nb):
+            i0, i1 = bi * bq, min((bi + 1) * bq, n)
+            s = mm_block(i0, i1, i0, i1)
+            ar = np.arange(i1 - i0)
+            s[ar, ar] = -np.inf                      # self knockout
+            kk = min(ks, s.shape[1] - 1)
+            if kk < 1:
+                # degenerate trailing block (width 1: the knockout ate
+                # the only sample) — no threshold to take; +inf yields
+                # zero survivors, routing the rows to the exact fallback
+                taus[i0:i1] = np.inf
+                continue
+            if use_t:
+                v = _torch.topk(scr_t[:i1 - i0, :i1 - i0], kk, dim=1,
+                                sorted=True)[0]
+                taus[i0:i1] = v[:, -1].numpy()
+            else:
+                taus[i0:i1] = np.partition(
+                    s, s.shape[1] - kk, axis=1)[:, s.shape[1] - kk]
+            collect(bi, s, s > taus[i0:i1, None], i0, False)
+
+        # phase 2 — off-diagonal pairs, both sides from one GEMM
+        for bi in range(nb):
+            i0, i1 = bi * bq, min((bi + 1) * bq, n)
+            for bj in range(bi + 1, nb):
+                j0, j1 = bj * bq, min((bj + 1) * bq, n)
+                s = mm_block(i0, i1, j0, j1)
+                collect(bi, s, s > taus[i0:i1, None], j0, False)
+                collect(bj, s, s > taus[j0:j1][None, :], i0, True)
+
+        # phase 3 — per-row-block survivor assembly + canonical top-M
+        shorts = np.full((n, m), n, np.int32)
+        fallback: list = []
+        for bi in range(nb):
+            i0, i1 = bi * bq, min((bi + 1) * bq, n)
+            nv = i1 - i0
+            if not tri[bi]:
+                fallback.extend(range(i0, i1))
+                continue
+            rows = np.concatenate([t[0] for t in tri[bi]])
+            cols = np.concatenate([t[1] for t in tri[bi]])
+            vals = np.concatenate([t[2] for t in tri[bi]])
+            # COO→CSR is an O(n) counting sort grouping survivors by row
+            # with ascending candidate ids — which makes the padded
+            # table's column order canonical for tie repair
+            if _scipy_sparse is not None:
+                a = _scipy_sparse.coo_matrix(
+                    (vals, (rows, cols)), shape=(nv, n)).tocsr()
+                indptr, grp_i, grp_v = a.indptr, a.indices, a.data
+            else:
+                order = np.lexsort((cols, rows))
+                rows, grp_i, grp_v = rows[order], cols[order], vals[order]
+                indptr = np.zeros(nv + 1, np.int64)
+                np.cumsum(np.bincount(rows, minlength=nv),
+                          out=indptr[1:])
+            cnt = np.diff(indptr)
+            fb = np.nonzero(cnt < m)[0]
+            fallback.extend((i0 + fb).tolist())
+            w = int(cnt.max())
+            padv = np.full((nv, w), -np.inf, np.float32)
+            padi = np.full((nv, w), n, np.int32)
+            rr = np.repeat(np.arange(nv), cnt)
+            within = np.arange(len(grp_v)) - np.repeat(
+                indptr[:-1].astype(np.int64), cnt)
+            padv[rr, within] = grp_v
+            padi[rr, within] = grp_i
+            selv, sel = _topm_rows(padv, min(m, w))
+            picked = np.take_along_axis(padi, sel, axis=1)
+            shorts[i0:i1, :picked.shape[1]] = np.where(
+                np.isneginf(selv), n, picked)
+        if fallback:
+            fb_ids = np.asarray(fallback, np.int32)
+            shorts[fb_ids] = self._scan_dense_block(p_np, fb_ids, None, m)
+        return shorts
+
     # -- query -------------------------------------------------------------
     def query(self, ratings: jnp.ndarray, means: jnp.ndarray,
               user_ids=None, *, k: int, measure: str = "pcc",
@@ -912,6 +1500,13 @@ class ClusteredIndex(_SpillClusterCore):
         times.  ``beta`` is the ``pcc_sig`` shrink horizon (None → module
         default).  With ``n_probe == n_clusters`` and ``rerank_frac == 0``
         the result is bit-identical to the exact engines.
+
+        Pass 1 builds per-query shortlists through the resolved scan mode
+        (``_scan_mode``); blocks whose candidate union already fits the
+        rerank budget go straight through the shared-matmul exact path
+        (also the bit-exact degenerate mode).  All scan modes share the
+        canonical ``(-score, id)`` selection policy, so they agree bit
+        for bit wherever their candidate pools coincide.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -927,95 +1522,92 @@ class ClusteredIndex(_SpillClusterCore):
         n_reranked = 0
         t_short = 0.0
         t_rerank = 0.0
-        t0 = time.perf_counter()
+        t_begin = time.perf_counter()
 
-        # pass 1 — probe clusters and build per-query shortlists; blocks
-        # whose candidate union already fits the rerank budget go straight
-        # through the shared-matmul exact path (also the bit-exact
-        # degenerate mode).  When every user is spill-assigned fewer ways
-        # than the query probes (n_probe·spill ≥ C), the block union
-        # provably saturates to ~all users — the pool shortcut skips the
-        # per-block probe/set algebra and scans the full proxy table.
-        # The proxy scan and top-M selection run on the host (OpenBLAS +
-        # threaded introselect on the upper side): at shortlist scale the
-        # score matrix never round-trips through a device buffer.
+        scan = self._scan_mode(n_probe) if max_rerank else "pool"
+        # pool shortcut: candidates = the whole population, no per-block
+        # probing — always for the device scan (it never materialises the
+        # score matrix), on the host when probing saturates the pool
+        # (n_probe·spill ≥ C: every user's spill list meets the probes)
         pool_all = (bool(max_rerank) and max_rerank < self.n_users
-                    and n_probe * self.spill_ids.shape[1] >= self.n_clusters)
-        # host proxy table only exists on the filtered path; the
-        # unfiltered/degenerate mode never pays the copy (cached anyway)
-        p_np = self._proxies_np() if max_rerank else None
+                    and (scan == "kernel"
+                         or (scan == "pool"
+                             and n_probe * self.spill_ids.shape[1]
+                             >= self.n_clusters)))
+        # host proxy table only exists where a host scan runs; the device
+        # scan and the unfiltered/degenerate mode never pay the copy
+        p_np = (self._proxies_np()
+                if max_rerank and scan != "kernel" else None)
         if pool_all:
-            cand_all = np.arange(self.n_users, dtype=np.int32)
             # no per-block probe work here, so score in tall blocks — the
             # (bq, p)·(p, U) GEMM runs ~2.5× faster at bq=2048 than 256
             bq = min(2048, _bucket(len(uids)))
+        mc = self.member_counts() if scan == "cluster" else None
+        spill = self.spill_ids.shape[1]
         pend_pos: list = []        # output row ranges awaiting pass 2
         pend_short: list = []      # their (nv, max_rerank) shortlists
-        for lo in range(0, len(uids), bq):
-            ids = uids[lo:lo + bq]
-            nv = len(ids)
-            ids_pad = np.full((bq,), self.n_users, np.int32)
-            ids_pad[:nv] = ids
-            if pool_all:
-                cand, cand_pad = cand_all, cand_all
-            else:
+
+        # pass 1 — shortlist scan (see the class docstring's stage map)
+        if pool_all and scan == "pool" \
+                and self._use_symmetric(len(uids), max_rerank) \
+                and np.array_equal(uids, np.arange(self.n_users)):
+            shorts_all = self._scan_symmetric(p_np, max_rerank, bq)
+            n_probed += len(uids) * self.n_users
+            n_reranked += int((shorts_all < self.n_users).sum())
+            pend_pos.append(np.arange(len(uids)))
+            pend_short.append(shorts_all)
+            t_short += time.perf_counter() - t_begin
+        else:
+            for lo in range(0, len(uids), bq):
+                t0 = time.perf_counter()
+                ids = uids[lo:lo + bq]
+                nv = len(ids)
+                ids_pad = np.full((bq,), self.n_users, np.int32)
+                ids_pad[:nv] = ids
+                if pool_all:
+                    short_np = (
+                        self._scan_kernel_block(ids_pad, nv, max_rerank)
+                        if scan == "kernel" else
+                        self._scan_dense_block(p_np, ids, None, max_rerank))
+                    n_probed += nv * self.n_users
+                    n_reranked += int((short_np < self.n_users).sum())
+                    pend_pos.append(np.arange(lo, lo + nv))
+                    pend_short.append(short_np)
+                    t_short += time.perf_counter() - t0
+                    continue
                 ids_j = jnp.asarray(ids_pad)
                 probe = np.asarray(_probe_clusters(
                     self.proxies, self.centroids, ids_j, n_probe=n_probe,
                     use_kernel=self._use_kernel(),
                     interpret=self.cfg.interpret))
                 clusters = np.unique(probe[:nv])
+                if max_rerank and scan == "cluster" and \
+                        int(mc[clusters].sum()) > max_rerank * spill:
+                    # cluster-restricted scan (the slot count provably
+                    # exceeds the budget even after spill dedup)
+                    short_np, n_slots = self._scan_cluster_block(
+                        p_np, ids, clusters, max_rerank)
+                    n_probed += nv * n_slots
+                    n_reranked += int((short_np < self.n_users).sum())
+                    pend_pos.append(np.arange(lo, lo + nv))
+                    pend_short.append(short_np)
+                    t_short += time.perf_counter() - t0
+                    continue
                 cand = np.unique(np.concatenate(
                     [self._members[c] for c in clusters]))
                 L = _bucket(len(cand))
                 cand_pad = np.full((L,), self.n_users, np.int32)
                 cand_pad[:len(cand)] = cand
-            if max_rerank and max_rerank < len(cand):
-                # filtered path: shortlist by proxy affinity against the
-                # block's probed-cluster union — one host GEMM (gather-free
-                # under the pool shortcut) + top-M selection.  torch's mm
-                # and topk (both multithreaded, and topk selects k directly
-                # instead of writing a full argsort permutation) run ~2×
-                # faster than the numpy GEMM + threaded introselect pair,
-                # which falls back in when torch is unavailable.
-                n_probed += nv * len(cand)
-                q_c = np.ascontiguousarray(p_np[ids])
-                if _torch is not None:
-                    b_c = p_np if pool_all \
-                        else np.ascontiguousarray(p_np[cand])
-                    if self._short_buf is None or \
-                            self._short_buf.shape[1] != len(b_c) or \
-                            self._short_buf.shape[0] < nv:
-                        self._short_buf = _torch.empty(
-                            nv, len(b_c), dtype=_torch.float32)
-                    sp_t = self._short_buf[:nv]
-                    _torch.mm(_torch.from_numpy(q_c),
-                              _torch.from_numpy(b_c).T, out=sp_t)
-                    sp = sp_t.numpy()       # shared-memory view
-                else:
-                    sp = q_c @ (p_np.T if pool_all else p_np[cand].T)
-                if pool_all:                # self-pair knockout
-                    sp[np.arange(nv), ids] = -np.inf
-                else:
-                    at = np.searchsorted(cand, ids)
-                    hit = np.nonzero((at < len(cand))
-                                     & (cand[np.minimum(at, len(cand) - 1)]
-                                        == ids))[0]
-                    sp[hit, at[hit]] = -np.inf
-                if _torch is not None:
-                    selv_t, sel_t = _torch.topk(sp_t, max_rerank, dim=1,
-                                                sorted=False)
-                    selv, sel = selv_t.numpy(), sel_t.numpy()
-                else:
-                    sel = _argpartition_rows(sp, max_rerank)
-                    selv = np.take_along_axis(sp, sel, 1)
-                picked = sel if pool_all else cand[sel]
-                short_np = np.where(selv == -np.inf, self.n_users,
-                                    picked).astype(np.int32)
-                n_reranked += int((short_np < self.n_users).sum())
-                pend_pos.append(np.arange(lo, lo + nv))
-                pend_short.append(short_np)
-            else:
+                if max_rerank and max_rerank < len(cand):
+                    # dense fallback: block-union gather scan
+                    short_np = self._scan_dense_block(p_np, ids, cand,
+                                                      max_rerank)
+                    n_probed += nv * len(cand)
+                    n_reranked += int((short_np < self.n_users).sum())
+                    pend_pos.append(np.arange(lo, lo + nv))
+                    pend_short.append(short_np)
+                    t_short += time.perf_counter() - t0
+                    continue
                 # unfiltered path: exact per-query probe semantics — a
                 # candidate counts iff one of its spill clusters was probed
                 # by that query (the bit-exact degenerate mode lives here)
@@ -1028,12 +1620,18 @@ class ClusteredIndex(_SpillClusterCore):
                                & (cand_pad[None, :] != ids[:, None])).sum())
                 n_probed += n_pairs
                 n_reranked += n_pairs
+                # candidate generation above is shortlist-stage work; the
+                # shared-matmul exact scoring below is rerank work even
+                # though it runs inside pass 1 (the stage timers must
+                # partition the wall total — see QueryStats)
+                t_mid = time.perf_counter()
+                t_short += t_mid - t0
                 s, i = _rerank_shared(ratings, ids_j, jnp.asarray(cand_pad),
                                       jnp.asarray(allowed), k=k,
                                       measure=measure, beta=beta)
                 out_s[lo:lo + bq] = np.asarray(s)[:nv]
                 out_i[lo:lo + bq] = np.asarray(i)[:nv]
-        t_short = time.perf_counter() - t0
+                t_rerank += time.perf_counter() - t_mid
 
         # pass 2 — exact rerank of the shortlists
         mode = self._rerank_mode(max_rerank)
@@ -1054,7 +1652,7 @@ class ClusteredIndex(_SpillClusterCore):
                                     pos, out_s, out_i, k=k,
                                     measure=measure, beta=beta,
                                     max_rerank=max_rerank)
-            t_rerank = time.perf_counter() - t0
+            t_rerank += time.perf_counter() - t0
 
         self.last_query = QueryStats(n_queries=len(uids),
                                      n_users=self.n_users,
@@ -1062,7 +1660,10 @@ class ClusteredIndex(_SpillClusterCore):
                                      n_reranked=n_reranked,
                                      seconds_shortlist=t_short,
                                      seconds_rerank=t_rerank,
-                                     rerank_mode=mode)
+                                     seconds_total=(time.perf_counter()
+                                                    - t_begin),
+                                     rerank_mode=mode,
+                                     scan_mode=scan if max_rerank else "")
         return jnp.asarray(out_s), jnp.asarray(out_i)
 
     def _rerank_gather(self, ratings, norms, counts, q_all, shorts, pos,
@@ -1332,14 +1933,18 @@ class ClusteredIndex(_SpillClusterCore):
 
     # -- incremental maintenance ------------------------------------------
     def refold(self, ratings: jnp.ndarray, means: jnp.ndarray,
-               touched: np.ndarray) -> RefoldStats:
+               touched: np.ndarray, *,
+               version: Optional[int] = None) -> RefoldStats:
         """Fold a rating delta into the index (see module docstring).
 
         ``touched``: sorted unique user ids whose rows changed;
         ``ratings``/``means`` are the post-update arrays.  Assignment
         repair is exact (``_refold_rows``); when cumulative reassignment
         crosses ``cfg.refit_reassign_frac`` a cold refit re-anchors the
-        drifted centroid positions.
+        drifted centroid positions.  ``version`` is the caller's ratings
+        version counter (``CFEngine`` passes its own): the derived
+        per-ratings caches are delta-patched along an unbroken version
+        chain instead of being rebuilt wholesale on the next query.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -1347,13 +1952,16 @@ class ClusteredIndex(_SpillClusterCore):
         if touched.size == 0:
             self.last_refold = RefoldStats(0, 0, 0, 0, self.n_users)
             return self.last_refold
+        patched = self._patch_row_caches(ratings, np.unique(touched),
+                                         version, means=means)
         p_new_j = self._proxy_rows(ratings[jnp.asarray(touched)],
                                    means[jnp.asarray(touched)])
         changed, full_rows, reassigned = self._refold_rows(touched, p_new_j)
         stats = RefoldStats(
             n_touched=int(touched.size), n_changed_clusters=len(changed),
             n_reassigned=reassigned, n_full_rows=len(full_rows),
-            n_certified=self.n_users - len(full_rows))
+            n_certified=self.n_users - len(full_rows),
+            caches_patched=patched)
         self._maybe_refit(ratings, means, stats)
         self.last_refold = stats
         return stats

@@ -76,8 +76,8 @@ except ImportError:        # pragma: no cover - container ships scipy
 
 from repro.core import predict as pred_mod
 from repro.core import similarity as sim
-from repro.index.clustered import (_SpillClusterCore, _argpartition_rows,
-                                   _bucket, _project, _svd_basis)
+from repro.index.clustered import (_SpillClusterCore, _bucket, _project,
+                                   _svd_basis, _topm_rows)
 from repro.index.kmeans import normalize_rows
 
 
@@ -367,6 +367,7 @@ class ItemClusteredIndex(_SpillClusterCore):
         """Project, cluster, and spill-assign the item columns, then fold
         every user's taste profile into item-proxy space."""
         ratings = jnp.asarray(ratings, jnp.float32)
+        self._ratings_key = ratings          # (re)anchor the version chain
         self.n_users, self.n_rows = ratings.shape
         if means is None:
             means = sim.user_stats(ratings)[2]
@@ -467,17 +468,33 @@ class ItemClusteredIndex(_SpillClusterCore):
 
             m_short = max(n, shortlist) if shortlist else 0
             if m_short and m_short < len(cand):
-                if pool_all:
-                    sp = np.asarray(_shortlist_scores_all(
-                        prof, self.proxies, seen_rows))[:nv]
+                sp_dev = (_shortlist_scores_all(prof, self.proxies,
+                                                seen_rows)
+                          if pool_all else
+                          _shortlist_scores(prof, self.proxies,
+                                            jnp.asarray(cand_pad),
+                                            seen_rows))
+                if self._use_kernel() or self.cfg.interpret:
+                    # device top-M through the shared blockwise-select
+                    # kernel — proxy scores never round-trip to the host
+                    # (the scores already carry the seen-item knockout,
+                    # so no q_ids self-knockout is needed)
+                    from repro.kernels.select import select_topm
+                    v, sel = select_topm(
+                        sp_dev, jnp.full((sp_dev.shape[0],), -1,
+                                         jnp.int32),
+                        m=min(m_short, sp_dev.shape[1]),
+                        interpret=self.cfg.interpret)
+                    selv = np.asarray(v)[:nv]
+                    sel = np.asarray(sel)[:nv]
                 else:
-                    sp = np.asarray(_shortlist_scores(
-                        prof, self.proxies, jnp.asarray(cand_pad),
-                        seen_rows))[:nv]
-                sel = _argpartition_rows(sp, m_short)
-                short = np.where(
-                    np.take_along_axis(sp, sel, 1) == -np.inf,
-                    self.n_items, cand_pad[sel]).astype(np.int32)
+                    # np.array: jax hands back a read-only view and the
+                    # torch topk fast path wants a writable buffer
+                    sp = np.array(np.asarray(sp_dev)[:nv])
+                    selv, sel = _topm_rows(sp, m_short,
+                                           col_ids=cand_pad)
+                short = np.where(np.isneginf(selv), self.n_items,
+                                 cand_pad[sel]).astype(np.int32)
                 short = np.sort(short, axis=1)   # ascending → monotone
                 short_pad = np.full((bq, m_short), self.n_items, np.int32)
                 short_pad[:nv] = short
@@ -656,10 +673,65 @@ class ItemClusteredIndex(_SpillClusterCore):
             n_probed=len(uids) * n_items, n_reranked=n_reranked)
         return jnp.asarray(out_s), jnp.asarray(out_i)
 
+    # -- delta-aware cache maintenance -------------------------------------
+    def _patch_extra_row_caches(self, ratings, means, touched, old) -> int:
+        """Delta-patch the support-scorer operands for a user-row delta:
+        the stacked [dev|mask] CSR gets a row splice (touched users'
+        deviations re-derive from their moved means; untouched rows
+        bulk-copy), the dense kernel operands a row scatter."""
+        patched = 0
+        if self._support_cache is not None and \
+                self._support_cache[0] is old and means is not None:
+            tbl = self._support_cache[1]
+            rows_new = np.asarray(ratings[jnp.asarray(touched)])
+            means_t = np.asarray(means[jnp.asarray(touched)])
+            if _scipy_sparse is not None and _scipy_sparse.issparse(tbl):
+                n_items = self.n_items
+                stacked_rows = _support_rows(rows_new, means_t)
+                from repro.index.clustered import _patch_csr
+                indptr, idx, data = _patch_csr(
+                    (tbl.indptr.astype(np.int64), tbl.indices, tbl.data),
+                    touched, stacked_rows)
+                tbl = _scipy_sparse.csr_matrix(
+                    (data, idx, indptr), shape=(self.n_users,
+                                                2 * n_items))
+            else:
+                tbl = tbl.copy()
+                tbl[touched] = _support_rows(rows_new, means_t)
+            self._support_cache = (ratings, tbl)
+            patched += 1
+        else:
+            self._support_cache = None
+        if self._support_dense_cache is not None and \
+                self._support_dense_cache[0] is old and means is not None:
+            dev, msk = self._support_dense_cache[1]
+            t_j = jnp.asarray(touched)
+            rows = ratings[t_j]
+            mask = rows > 0
+            d_rows = jnp.where(mask, rows - means[t_j][:, None], 0.0
+                               ).astype(jnp.float32)
+            m_rows = mask.astype(jnp.float32)
+            pad = dev.shape[1] - rows.shape[1]
+            if pad:
+                d_rows = jnp.pad(d_rows, ((0, 0), (0, pad)))
+                m_rows = jnp.pad(m_rows, ((0, 0), (0, pad)))
+            self._support_dense_cache = (
+                ratings, (dev.at[t_j].set(d_rows),
+                          msk.at[t_j].set(m_rows)))
+            patched += 1
+        else:
+            self._support_dense_cache = None
+        return patched
+
+    def _drop_extra_row_caches(self) -> None:
+        self._support_cache = None
+        self._support_dense_cache = None
+
     # -- incremental maintenance ------------------------------------------
     def refold(self, ratings: jnp.ndarray, means: jnp.ndarray,
                touched_users: np.ndarray,
-               touched_items: np.ndarray):
+               touched_items: np.ndarray, *,
+               version: Optional[int] = None):
         """Fold a rating delta into the item index.
 
         ``touched_users``/``touched_items``: the delta's distinct user and
@@ -670,6 +742,9 @@ class ItemClusteredIndex(_SpillClusterCore):
         profiles are maintained exactly: untouched users take the
         ``Σ w·Δproxy`` correction over the touched columns (their weight
         columns did not move), touched users are recomputed in full.
+        ``version``: the caller's ratings version counter — derived
+        per-ratings caches (gather source, support-scorer operands) are
+        delta-patched along an unbroken chain instead of rebuilt.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -677,6 +752,8 @@ class ItemClusteredIndex(_SpillClusterCore):
             np.asarray(touched_users, np.int32)))
         t_items = np.unique(np.atleast_1d(
             np.asarray(touched_items, np.int32)))
+        n_patched = self._patch_row_caches(ratings, t_users, version,
+                                           means=means)
         if self.cfg.features == "centered" and t_users.size:
             rated = np.asarray(ratings[jnp.asarray(t_users)] > 0)
             t_items = np.unique(np.concatenate(
@@ -712,7 +789,8 @@ class ItemClusteredIndex(_SpillClusterCore):
         stats = RefoldStats(
             n_touched=int(t_items.size), n_changed_clusters=len(changed),
             n_reassigned=reassigned, n_full_rows=len(full_rows),
-            n_certified=self.n_items - len(full_rows))
+            n_certified=self.n_items - len(full_rows),
+            caches_patched=n_patched)
 
         # periodic profile re-fold (ROADMAP "profile drift"): once the
         # cumulative touched-column fraction crosses the threshold, zero

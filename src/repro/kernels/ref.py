@@ -94,6 +94,32 @@ def support_scores_ref(dev: jnp.ndarray, msk: jnp.ndarray,
     return jnp.clip(pred, 1.0, 5.0)
 
 
+# -- blockwise top-M select ---------------------------------------------------
+
+def select_topm_ref(scores: jnp.ndarray, m: int):
+    """(Q, N) scores → canonical top-``m``: ``(values, ids)`` under the
+    exact engines' ``(-score, id)`` order (descending score, ties to the
+    lower id).  Oracle for ``repro.kernels.select`` — the selection
+    policy every shortlist scan mode must reproduce bit for bit."""
+    n = scores.shape[1]
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                           scores.shape)
+    neg_sorted, idx_sorted = jax.lax.sort((-scores, ids), num_keys=2)
+    m = min(m, n)
+    return -neg_sorted[:, :m], idx_sorted[:, :m]
+
+
+def scan_topm_ref(q: jnp.ndarray, proxies: jnp.ndarray,
+                  q_ids: jnp.ndarray, m: int):
+    """(Q, P) query proxies × (N, P) pool → canonical top-``m`` of the
+    proxy scores with the self-pair knockout.  Oracle for
+    ``repro.kernels.select.fused_scan_topm``."""
+    s = jnp.matmul(q, proxies.T, precision=jax.lax.Precision.HIGHEST)
+    col = jnp.arange(proxies.shape[0], dtype=jnp.int32)[None, :]
+    s = jnp.where(col == q_ids.astype(jnp.int32)[:, None], -jnp.inf, s)
+    return select_topm_ref(s, m)
+
+
 # -- fused centroid distances -------------------------------------------------
 
 def centroid_distances_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
