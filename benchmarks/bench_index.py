@@ -44,7 +44,7 @@ RERANK_FRAC = {32768: 0.02}
 PROJECT_DIM = {32768: 512}
 
 # regression floors for the CI smoke (--quick): recall below this fails
-QUICK_RECALL_FLOOR = 0.90
+QUICK_RECALL_FLOOR = 0.94
 
 # sizes at which both rerank modes are timed (the grouped union-Gram
 # path is the accelerator formulation; on CPU it exists as the OpenBLAS
@@ -107,16 +107,17 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
         recall = _recall(exact_i, np.asarray(got_i))
         frac = stats.rerank_fraction
         speedup = exact_s / (fit_s + query_s)
-        # the stage timers must partition the reported query total — the
-        # accounting bug class this guards against is rerank work landing
-        # in the shortlist bucket (or falling out entirely) around the
-        # pass-1/pass-2 boundary
+        # the stage timers must partition the reported query total
+        # *exactly* on every scan and query mode — rerank is measured,
+        # shortlist absorbs the remainder, and their sum defines the
+        # total; any gap means rerank work landed in the shortlist
+        # bucket (or fell out entirely) around a pass boundary
         stage_gap = stats.seconds_total - (stats.seconds_shortlist
                                            + stats.seconds_rerank)
-        assert -1e-6 <= stage_gap <= 0.1 * stats.seconds_total + 0.05, (
+        assert stage_gap == 0.0, (
             f"stage timers do not sum to the query total: "
             f"{stats.seconds_shortlist} + {stats.seconds_rerank} vs "
-            f"{stats.seconds_total}")
+            f"{stats.seconds_total} (gap {stage_gap})")
         row = {
             "name": f"index_{measure}_U{n_users}",
             "us_per_call": query_s / n_users * 1e6,   # per-user query cost
@@ -135,9 +136,14 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
             # batching wins directly visible across PRs
             "rerank_mode": stats.rerank_mode,
             "scan_mode": stats.scan_mode,
+            "query_mode": stats.query_mode,
+            "scan_gate": stats.scan_gate,
             "shortlist_s": round(stats.seconds_shortlist, 3),
             "rerank_s": round(stats.seconds_rerank, 3),
             "stage_total_s": round(stats.seconds_total, 3),
+            # unrounded partition residual: exactly 0.0 by the assert
+            # above; recorded so artifact-level checks need no tolerance
+            "stage_gap_s": stage_gap,
         }
         if n_users in SHORTLIST_SPEEDUP_SIZES:
             # shortlist-stage comparison on the same fitted index: the

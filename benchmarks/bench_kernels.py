@@ -76,6 +76,57 @@ def run():
                  "derived": "correctness-mode timing (no Mosaic on CPU)"})
     rows += run_rerank_smoke(rng)
     rows += run_select_smoke(rng)
+    rows += run_compiled(rng)
+    return rows
+
+
+def run_compiled(rng, q_n: int = 512, n: int = 8192, p: int = 256,
+                 m: int = 256, g: int = 256, kc: int = 1024, j: int = 512):
+    """Time the *compiled* fused query-pipeline stages at realistic shapes.
+
+    On a TPU backend the Pallas kernels lower through Mosaic and are
+    timed as such (``path: mosaic``); elsewhere the timed program is the
+    jitted XLA twin that the fused pipeline actually dispatches off-TPU
+    (``path: xla``).  Either way the rows record what ``query_mode=
+    "fused"`` runs on this host, not an interpret-mode proxy.
+    """
+    from repro.kernels.rerank import rerank_scores_xla
+    from repro.kernels.select import fused_scan_topm, scan_topm_xla
+
+    on_tpu = jax.default_backend() == "tpu"
+    path = "mosaic" if on_tpu else "xla"
+    rows = []
+
+    q = jnp.asarray(rng.normal(size=(q_n, p)).astype(np.float32))
+    prox = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    q_ids = jnp.asarray(np.arange(q_n, dtype=np.int32))
+    scan = ((lambda: fused_scan_topm(q, prox, q_ids, m=m, interpret=False))
+            if on_tpu else
+            (lambda: scan_topm_xla(q, prox, q_ids, m=m)))
+    rows.append({"name": f"compiled_scan_{q_n}x{n}_m{m}",
+                 "us_per_call": _time(scan),
+                 "path": path,
+                 "derived": f"flops={2 * q_n * n * p:.0f}"})
+
+    vq = (rng.integers(1, 6, (g, j))
+          * (rng.random((g, j)) < 0.3)).astype(np.float32)
+    rc = (rng.integers(1, 6, (kc, j))
+          * (rng.random((kc, j)) < 0.3)).astype(np.float32)
+    norms = jnp.asarray(np.sqrt((rc * rc).sum(1)).astype(np.float32))
+    counts = jnp.asarray((rc > 0).sum(1).astype(np.float32))
+    vq_j = jnp.asarray(vq)
+    rc_j = jnp.asarray(rc.astype(np.int8) if on_tpu else rc)
+    for measure in ("cosine", "pcc_sig"):
+        fn = ((lambda: fused_rerank_scores(vq_j, rc_j, norms, counts,
+                                           measure=measure,
+                                           interpret=False))
+              if on_tpu else
+              (lambda: rerank_scores_xla(vq_j, rc_j, norms, counts,
+                                         measure=measure)))
+        rows.append({"name": f"compiled_rerank_{measure}_{g}x{kc}x{j}",
+                     "us_per_call": _time(fn),
+                     "path": path,
+                     "derived": f"flops={6 * g * kc * j:.0f}"})
     return rows
 
 

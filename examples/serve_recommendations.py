@@ -48,6 +48,10 @@ def main():
                     help="approx mode: clusters (0 = auto ~sqrt(U))")
     ap.add_argument("--n-probe", type=int, default=0,
                     help="approx mode: probed clusters (0 = auto)")
+    ap.add_argument("--query-mode", default="auto",
+                    choices=("auto", "staged", "fused"),
+                    help="approx mode: index query pipeline (auto picks "
+                         "fused where the Pallas kernels run)")
     args = ap.parse_args()
 
     train, _, _ = load_ml1m_synthetic(n_users=1024, n_items=512)
@@ -56,6 +60,7 @@ def main():
         from repro.index import IndexConfig
         index_cfg = IndexConfig(
             n_clusters=args.n_clusters, n_probe=args.n_probe,
+            query_mode=args.query_mode,
             features="centered" if args.measure == "pcc" else "raw")
     engine = CFEngine(jnp.asarray(train), measure=args.measure, k=40,
                       backend=args.backend, block_size=256,
@@ -67,6 +72,7 @@ def main():
         qs = engine.index.last_query
         print(f"index: {engine.index.n_clusters} clusters, "
               f"probe {engine.index.n_probe}, "
+              f"query={qs.query_mode or 'staged'}, "
               f"{qs.rerank_fraction:.1%} of rows exactly reranked, "
               f"recall@{engine.k} vs exact = "
               f"{engine.recall_vs_exact(sample=256):.3f}")

@@ -62,8 +62,10 @@ from repro.core import predict as pred_mod
 from repro.core import similarity as sim
 from repro.index.kmeans import (KMeansStats, center_rows, kmeans,
                                 normalize_rows)
+from repro.kernels import select as sel_mod
 from repro.kernels.cluster import centroid_distances
-from repro.kernels.rerank import fused_rerank_scores, rerank_scores_host
+from repro.kernels.rerank import (fused_rerank_scores, rerank_scores_host,
+                                  rerank_scores_xla)
 
 try:                # optional host fast path for the proxy scan: torch's
                     # CPU mm/topk are multithreaded and topk selects k
@@ -83,6 +85,7 @@ except ImportError:  # pragma: no cover - container ships scipy
 
 RERANK_MODES = ("auto", "gather", "grouped")
 SCAN_MODES = ("auto", "pool", "cluster", "kernel")
+QUERY_MODES = ("auto", "staged", "fused")
 
 # symmetric-pair scan: each unordered query-block pair's P·Pᵀ GEMM runs
 # once and is consumed for both sides while cache-resident (half the
@@ -95,8 +98,20 @@ _SYM_MAX_BYTES = 8 << 30
 # symmetric scan pays off where the threshold filter is selective: at
 # rerank budgets past this fraction of the pool the survivor mass stops
 # filtering (≥ ~10% of every score block survives) and the plain
-# streaming top-M wins; cfg.scan_symmetric=True overrides for tests
+# streaming top-M measures faster, so *auto* prefers it there — the
+# resolved reason lands in QueryStats.scan_gate.  A forced
+# cfg.scan_symmetric=True is never silently ignored: it runs the leveled
+# scan below (or raises when the config cannot run it at all).
 _SYM_FRAC_MAX = 0.06
+# fat-budget degrade levels: the threshold oversample steps down until
+# the projected survivor mass fits _SYM_MAX_BYTES (the selected level is
+# recorded in QueryStats.scan_gate); whatever the level, the per-block
+# survivor compaction in _scan_symmetric bounds peak memory by folding
+# accumulated survivors into running per-row top-M panels once they
+# exceed _SYM_COMPACT_FACTOR times the expected mass
+_SYM_LEVELS = (1.5, 1.25, 1.1)
+_SYM_COMPACT_FACTOR = 2
+_SYM_COMPACT_MIN = 256         # per-row floor: never fold tiny panels
 
 # gather-mode rerank: queries per device call (block) — large blocks
 # amortise per-call dispatch/sort overhead; the byte budget bounds the
@@ -179,9 +194,32 @@ class IndexConfig:
     # shortlists are bit-identical wherever the candidate pools coincide.
     shortlist_scan_mode: str = "auto"
     # symmetric-pair scan override: None → auto (on for full-population
-    # pool scans within the O(U²) buffer budget), False → always the
-    # plain streaming scan, True → force (still budget/population gated).
+    # host pool scans at selective rerank budgets), False → always the
+    # plain streaming scan, True → force it — fat budgets degrade through
+    # the _SYM_LEVELS oversample ladder instead of being silently gated,
+    # and a config that cannot run it at all (subset queries, a non-pool
+    # scan mode, the fused query mode) raises instead of ignoring the
+    # override.  The resolved gate lands in QueryStats.scan_gate.
     scan_symmetric: Optional[bool] = None
+    # query-pipeline orchestration:
+    #   "staged" — every stage returns to the host between device calls:
+    #              shortlists come back as numpy tables and pass 2
+    #              re-dispatches them through the gather walk / grouped
+    #              rerank (the CPU-measured fast path, and the bit-exact
+    #              oracle the fused path is pinned against);
+    #   "fused"  — per query block the proxy scan, shortlist selection,
+    #              candidate-union gather and exact co-rated Gram rerank
+    #              chain through device-resident arrays: proxy scores and
+    #              candidate id lists never round-trip to the host (the
+    #              Pallas kernels where they run, their XLA twins
+    #              elsewhere — the staged-dispatch twin that makes the
+    #              same orchestration testable off-TPU).  Cluster probe
+    #              ids and their member-table unions (pre-score data) may
+    #              surface to the host; scores and shortlists do not;
+    #   "auto"   — fused where the accelerator kernels run (TPU), staged
+    #              elsewhere (measured: at CPU memory bandwidth the
+    #              bucketed gather walk beats the device union-Gram).
+    query_mode: str = "auto"
     # auto-refit drift guard: when the cumulative fraction of rows whose
     # spill list changed since the last cold fit crosses this, refold
     # performs a fresh k-means fit (0 disables).  refold keeps assignments
@@ -198,16 +236,32 @@ class QueryStats:
     n_users: int           # candidate population the fractions refer to
     n_probed: int          # probed-member rows summed over queries
     n_reranked: int        # rows exactly reranked (true similarity)
-    seconds_shortlist: float = 0.0   # probe + proxy scan + selection
+    seconds_shortlist: float = 0.0   # probe + proxy scan + selection, and
+                                     # every other non-rerank cost of the
+                                     # call (setup, assembly, the
+                                     # symmetric scan's certificate
+                                     # rescue rows): total − rerank
     seconds_rerank: float = 0.0      # exact rerank stage (including the
                                      # unfiltered blocks' shared-matmul
                                      # rerank, which is rerank work even
                                      # though it runs during pass 1)
-    seconds_total: float = 0.0       # whole-call wall time; the stage
-                                     # timers partition it (pinned by the
-                                     # benchmark's stage-sum check)
-    rerank_mode: str = ""            # resolved mode ("gather" | "grouped")
+    seconds_total: float = 0.0       # shortlist + rerank, by construction
+                                     # (the two stages partition the wall
+                                     # clock *exactly* on every scan and
+                                     # query mode — rerank is measured,
+                                     # shortlist absorbs the remainder;
+                                     # pinned by the benchmark's
+                                     # stage-sum check)
+    rerank_mode: str = ""            # resolved mode ("gather" | "grouped"
+                                     # | "fused")
     scan_mode: str = ""              # resolved shortlist scan mode
+    query_mode: str = ""             # resolved orchestration
+                                     # ("staged" | "fused")
+    scan_gate: str = ""              # resolved symmetric-scan gate:
+                                     # "sym:on:level=…" when it ran,
+                                     # "sym:off:<reason>" when another
+                                     # scan ran instead ("" only when no
+                                     # scan stage exists at all)
 
     def _frac(self, total: int) -> float:
         pairs = self.n_queries * max(self.n_users - 1, 1)
@@ -424,6 +478,38 @@ def _patch_csr(csr, touched: np.ndarray, rows_new: np.ndarray):
     return indptr_new, idx_new, data_new
 
 
+def _sym_group(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+               nv: int, n: int):
+    """COO survivor triplets → CSR groups per row with ascending candidate
+    ids — an O(n) counting sort whose column order makes the padded table
+    canonical for tie repair.  ``(rows, cols)`` pairs are unique by
+    construction (each unordered pair's GEMM block runs once, and the
+    symmetric scan's compaction only ever keeps subsets)."""
+    if _scipy_sparse is not None:
+        a = _scipy_sparse.coo_matrix((vals, (rows, cols)),
+                                     shape=(nv, n)).tocsr()
+        return a.indptr, a.indices, a.data
+    order = np.lexsort((cols, rows))
+    indptr = np.zeros(nv + 1, np.int64)
+    np.cumsum(np.bincount(rows[order], minlength=nv), out=indptr[1:])
+    return indptr, cols[order], vals[order]
+
+
+def _sym_pad(indptr, grp_i, grp_v, nv: int, n: int):
+    """CSR survivor groups → padded ``(nv, w)`` value/id tables
+    (``-inf`` / sentinel-``n`` padding) ready for ``_topm_rows``."""
+    cnt = np.diff(indptr)
+    w = max(int(cnt.max()), 1)
+    padv = np.full((nv, w), -np.inf, np.float32)
+    padi = np.full((nv, w), n, np.int32)
+    rr = np.repeat(np.arange(nv), cnt)
+    within = np.arange(len(grp_v)) - np.repeat(
+        indptr[:-1].astype(np.int64), cnt)
+    padv[rr, within] = grp_v
+    padi[rr, within] = grp_i
+    return padv, padi
+
+
 @jax.jit
 def _user_norms_counts(ratings):
     """Per-user full-row L2 norms and rated-item counts (one cheap pass)."""
@@ -581,6 +667,110 @@ def _rerank_shared(ratings, q_ids, cand_ids, allowed, *, k, measure,
     return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
 
 
+# -- fused query pipeline (device-resident stage chain) -----------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
+def _fused_scan_pool(proxies, q_ids, *, m, use_pallas, interpret):
+    """Device full-pool proxy scan of one query block.
+
+    (Q,) padded global query ids → canonical top-``m`` ``(values,
+    global shortlist ids)`` with the sentinel id ``U`` on every ``-inf``
+    slot.  The Pallas blockwise-select kernel where it runs, the exact
+    ``lax.top_k`` twin elsewhere — both the same selection the staged
+    kernel scan dispatches, so the fused path's shortlists are
+    bit-identical to the staged ones.  Padded query rows (id ``U``)
+    score garbage and are sliced off by the caller; proxy scores never
+    leave the device.
+    """
+    n = proxies.shape[0]
+    q = proxies[jnp.minimum(q_ids, n - 1)]
+    if use_pallas:
+        return sel_mod.fused_scan_topm(q, proxies, q_ids, m=m,
+                                       interpret=interpret)
+    return sel_mod.scan_topm_xla(q, proxies, q_ids, m=m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret"))
+def _fused_scan_restricted(proxies, cand_pad, q_ids, *, m, use_pallas,
+                           interpret):
+    """Device cluster-restricted proxy scan of one query block.
+
+    ``cand_pad``: (L,) *ascending* dup-free candidate ids out of the
+    block's probed member-table union (padding ``U``) — ascending so the
+    block-local tie-break of both select paths is the canonical global-id
+    order.  Scores the block against the gathered candidate proxies, maps
+    the block-local selection back to global ids on device, and returns
+    ``(values, global shortlist ids)`` under the same sentinel contract
+    as :func:`_fused_scan_pool`.
+    """
+    n = proxies.shape[0]
+    L = cand_pad.shape[0]
+    q = proxies[jnp.minimum(q_ids, n - 1)]
+    cp = proxies[jnp.minimum(cand_pad, n - 1)]
+    sp = jnp.matmul(q, cp.T, precision=jax.lax.Precision.HIGHEST)
+    invalid = (cand_pad[None, :] >= n) | (cand_pad[None, :] == q_ids[:, None])
+    sp = jnp.where(invalid, -jnp.inf, sp)
+    if use_pallas:
+        v, sel = sel_mod.select_topm(
+            sp, jnp.full(q_ids.shape, -1, jnp.int32), m=m,
+            interpret=interpret)
+    else:
+        v, sel = jax.lax.top_k(sp, m)
+    # block-local → global, masking sentinels *before* the gather (the
+    # select contract: -inf slots carry the local sentinel id L)
+    shorts = jnp.where(jnp.isneginf(v), n,
+                       cand_pad[jnp.minimum(sel, L - 1)])
+    return v, shorts.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ku", "k", "measure", "beta", "use_pallas", "interpret"))
+def _fused_rerank_block(r_gather, ratings, norms, counts, q_ids, shorts, *,
+                        ku, k, measure, beta, use_pallas, interpret):
+    """Device union-Gram rerank of one query block's shortlists.
+
+    ``shorts``: (b, M) global shortlist ids with sentinel ``U`` padding,
+    straight from the device scan — never materialised on the host.  The
+    block's candidate union comes out of a sized ``jnp.unique`` (``ku``
+    bounds the distinct count, so nothing is silently truncated), the
+    union rows are gathered once, and the whole (block, union) slab is
+    scored by the fused co-rated Gram kernel (its XLA twin off-TPU).
+    Scoring the union — a superset of each query's shortlist — changes
+    nothing: the result is defined by the ``searchsorted`` restriction
+    back to each query's own shortlist, and every Gram statistic is
+    exact (bit-identical to the sparse gather walk for integer rating
+    matrices).  The epilogue is the canonical ``(-score, id)`` sort;
+    NEG_INF slots surface as id -1 like every exact path.
+    """
+    n = r_gather.shape[0]
+    u = jnp.unique(shorts, size=ku, fill_value=n)
+    safe_u = jnp.minimum(u, n - 1)
+    q_rows = ratings[jnp.minimum(q_ids, n - 1)]
+    if use_pallas:
+        s = fused_rerank_scores(q_rows, r_gather[safe_u], norms[safe_u],
+                                counts[safe_u], measure=measure,
+                                beta=beta, interpret=interpret)
+    else:
+        s = rerank_scores_xla(q_rows, r_gather[safe_u], norms[safe_u],
+                              counts[safe_u], measure=measure, beta=beta)
+    # restriction: every real shortlist id is present in the union, so
+    # searchsorted lands exactly on its column; sentinel slots are masked
+    # (never gathered as row 0 — the clamp below is for the pad columns)
+    col = jnp.clip(jnp.searchsorted(u, shorts), 0, ku - 1)
+    sc = jnp.take_along_axis(s, col, axis=1)
+    invalid = (shorts >= n) | (shorts == q_ids[:, None])
+    sc = jnp.where(invalid, nb.NEG_INF, sc)
+    ci = jnp.where(invalid, n, shorts)
+    if sc.shape[1] < k:
+        sc = jnp.pad(sc, ((0, 0), (0, k - sc.shape[1])),
+                     constant_values=nb.NEG_INF)
+        ci = jnp.pad(ci, ((0, 0), (0, k - ci.shape[1])),
+                     constant_values=n)
+    neg_sorted, idx_sorted = jax.lax.sort((-sc, ci), num_keys=2)
+    top_s, top_i = -neg_sorted[:, :k], idx_sorted[:, :k]
+    return top_s, jnp.where(top_s <= nb.NEG_INF, -1, top_i)
+
+
 class _SpillClusterCore:
     """Axis-agnostic core shared by the user- and item-side indexes.
 
@@ -606,6 +796,9 @@ class _SpillClusterCore:
             raise ValueError(
                 f"unknown shortlist_scan_mode {cfg.shortlist_scan_mode!r}; "
                 f"want one of {SCAN_MODES}")
+        if getattr(cfg, "query_mode", "auto") not in QUERY_MODES:
+            raise ValueError(f"unknown query_mode {cfg.query_mode!r}; "
+                             f"want one of {QUERY_MODES}")
         self.cfg = cfg
         self.mesh = mesh              # k-means fit shards over this mesh
         self.mesh_axis = mesh_axis
@@ -1182,6 +1375,17 @@ class ClusteredIndex(_SpillClusterCore):
         return ("grouped" if max_rerank >= self._GROUPED_FRAC * self.n_rows
                 else "gather")
 
+    def _query_mode(self) -> str:
+        """Resolve ``cfg.query_mode`` (see IndexConfig): the fused
+        device-resident stage chain where the accelerator kernels run,
+        the staged host pipeline elsewhere.  The fused chain is correct
+        everywhere (its stages fall back to jitted XLA twins off-TPU),
+        but the staged host BLAS + bucketed gather walk is faster at CPU
+        memory bandwidth — only the device backend flips the default."""
+        if self.cfg.query_mode != "auto":
+            return self.cfg.query_mode
+        return "fused" if self._use_kernel() else "staged"
+
     # -- shortlist scan ----------------------------------------------------
     def _scan_mode(self, n_probe: int) -> str:
         """Resolve ``cfg.shortlist_scan_mode`` (see IndexConfig): the
@@ -1262,6 +1466,24 @@ class ClusteredIndex(_SpillClusterCore):
         return np.where(selv == -np.inf, self.n_users,
                         picked).astype(np.int32)
 
+    def _cluster_candidates(self, clusters: np.ndarray) -> np.ndarray:
+        """Dup-free member union of the probed ``clusters`` through the
+        padded member table — no per-block set algebra over member
+        lists.  Spill duplicates are knocked out by the canonical
+        ownership rule (a member is contributed by the *first probed*
+        cluster of its spill list), so the result equals the probed
+        clusters' member union exactly, in member-table (cluster-major)
+        order — callers needing ascending-id order sort it."""
+        n = self.n_users
+        tbl = self._member_table()[clusters]              # (ncl, Lmax)
+        flat = tbl.reshape(-1)
+        sp_l = self.spill_ids[np.minimum(flat, n - 1)]    # (F, spill)
+        probed = np.zeros(self.n_clusters, bool)
+        probed[clusters] = True
+        first = sp_l[np.arange(len(flat)), probed[sp_l].argmax(axis=1)]
+        own = np.repeat(clusters.astype(np.int32), tbl.shape[1])
+        return flat[(flat < n) & (first == own)]
+
     def _scan_cluster_block(self, p_np: np.ndarray, ids: np.ndarray,
                             clusters: np.ndarray, max_rerank: int
                             ) -> Tuple[np.ndarray, int]:
@@ -1275,14 +1497,7 @@ class ClusteredIndex(_SpillClusterCore):
         dense scan's wherever the pools coincide.  Returns the (nv, M)
         shortlist and the scanned-slot count."""
         n = self.n_users
-        tbl = self._member_table()[clusters]              # (ncl, Lmax)
-        flat = tbl.reshape(-1)
-        sp_l = self.spill_ids[np.minimum(flat, n - 1)]    # (F, spill)
-        probed = np.zeros(self.n_clusters, bool)
-        probed[clusters] = True
-        first = sp_l[np.arange(len(flat)), probed[sp_l].argmax(axis=1)]
-        own = np.repeat(clusters.astype(np.int32), tbl.shape[1])
-        cand = flat[(flat < n) & (first == own)]          # dup-free union
+        cand = self._cluster_candidates(clusters)         # dup-free union
         sp = self._proxy_gemm(np.ascontiguousarray(p_np[ids]),
                               np.ascontiguousarray(p_np[cand]))
         inv = np.full(n, -1, np.int64)                    # self knockout
@@ -1306,16 +1521,15 @@ class ClusteredIndex(_SpillClusterCore):
         pass — scores never round-trip to the host) where the kernels
         run, the exact ``lax.top_k`` twin elsewhere.  Both implement the
         canonical ``(-score, id)`` selection, pinned against
-        ``ref.select_topm_ref``."""
-        from repro.kernels import select as sel_mod
+        ``ref.select_topm_ref``.  Dispatches the *same* jitted scan as
+        the fused pipeline (``_fused_scan_pool``), so staged and fused
+        shortlists are identical by construction — only this staged
+        wrapper pulls them to the host."""
         m = min(max_rerank, self.n_users)
-        ids_j = jnp.asarray(ids_pad)
-        q = self.proxies[jnp.clip(ids_j, 0, self.n_users - 1)]
-        if self._use_kernel() or self.cfg.interpret:
-            v, i = sel_mod.fused_scan_topm(q, self.proxies, ids_j, m=m,
-                                           interpret=self.cfg.interpret)
-        else:
-            v, i = sel_mod.scan_topm_xla(q, self.proxies, ids_j, m=m)
+        v, i = _fused_scan_pool(
+            self.proxies, jnp.asarray(ids_pad), m=m,
+            use_pallas=self._use_kernel() or self.cfg.interpret,
+            interpret=self.cfg.interpret)
         v = np.asarray(v)[:nv]
         short = np.where(np.isneginf(v), self.n_users,
                          np.asarray(i)[:nv]).astype(np.int32)
@@ -1325,25 +1539,65 @@ class ClusteredIndex(_SpillClusterCore):
                            constant_values=self.n_users)
         return short
 
-    def _use_symmetric(self, n_queries: int, max_rerank: int) -> bool:
-        """Symmetric-pair scan applicability: full-population query set
-        (every unordered pair is needed on both sides, so each block
-        GEMM serves two query blocks), a *thin* rerank budget (the
-        threshold filter passes ~1.5·M/U of each score block — at fat
-        budgets the survivors stop being a filter and the plain top-M
-        pass wins), and the survivor-array memory budget."""
+    def _sym_level(self, max_rerank: int) -> float:
+        """Largest ``_SYM_LEVELS`` threshold oversample whose projected
+        survivor mass fits ``_SYM_MAX_BYTES``; the survivor compaction
+        inside ``_scan_symmetric`` bounds peak memory at any level, so
+        the ladder floor is always runnable."""
+        for os_ in _SYM_LEVELS:
+            if os_ * max_rerank * self.n_users * 12 <= _SYM_MAX_BYTES:
+                return os_
+        return _SYM_LEVELS[-1]
+
+    def _sym_eligibility(self, max_rerank: int, scan: str, pool_all: bool,
+                         full_pop: bool, qmode: str) -> Tuple[bool, str]:
+        """Resolve the symmetric-pair scan gate to ``(use, reason)``.
+
+        The reason string lands in ``QueryStats.scan_gate``, so a caller
+        always sees *which* scan ran and why — no silent fallbacks.  A
+        forced ``cfg.scan_symmetric=True`` raises on the hard gates
+        (the fused query mode keeps the scan on device, a subset query
+        set has no full pair population, a non-saturated or non-pool
+        scan has no symmetric GEMM to halve) instead of being ignored.
+        Fat budgets are no longer a hard gate: auto still prefers the
+        plain streaming scan there (the survivor filter stops being
+        selective and measures slower), but a forced config degrades
+        through the ``_SYM_LEVELS`` oversample ladder and runs.
+        """
+        forced = self.cfg.scan_symmetric is True
         if self.cfg.scan_symmetric is False:
-            return False
-        if n_queries != self.n_users:
-            return False
-        if max_rerank > _SYM_FRAC_MAX * self.n_users \
-                and self.cfg.scan_symmetric is not True:
-            return False
-        return (_SYM_OVERSAMPLE * max_rerank * self.n_users * 12
-                <= _SYM_MAX_BYTES)
+            return False, "sym:off:config"
+
+        def gate(reason: str, detail: str) -> Tuple[bool, str]:
+            if forced:
+                raise ValueError(
+                    f"scan_symmetric=True cannot run: {detail}")
+            return False, reason
+
+        if qmode == "fused":
+            return gate(
+                "sym:off:fused",
+                "query_mode='fused' keeps the scan on device; the "
+                "symmetric-pair scan is the host pool path (set "
+                "query_mode='staged' to use it)")
+        if scan != "pool" or not pool_all:
+            return gate(
+                "sym:off:scan-mode",
+                f"the resolved scan mode ({scan!r}, "
+                f"pool_all={pool_all}) is not the saturated host pool "
+                "scan the symmetric pair schedule halves")
+        if not full_pop:
+            return gate(
+                "sym:off:subset-queries",
+                "the pair buffer covers unordered pairs of the full "
+                "population only; this query set is a subset")
+        if not forced and max_rerank > _SYM_FRAC_MAX * self.n_users:
+            return False, "sym:off:fat-budget"
+        return True, f"sym:on:level={self._sym_level(max_rerank):.2f}"
 
     def _scan_symmetric(self, p_np: np.ndarray, max_rerank: int,
-                        bq: int) -> np.ndarray:
+                        bq: int,
+                        oversample: float = _SYM_OVERSAMPLE) -> np.ndarray:
         """Symmetric-pair full-population proxy scan with fused
         threshold selection.
 
@@ -1372,9 +1626,20 @@ class ClusteredIndex(_SpillClusterCore):
         best score strictly above ``tau``, so the canonical top-M over
         its survivors *is* the canonical top-M over the full row — bit
         against the plain scan's selection (ties at the cut included:
-        they are all > tau).  Rows with < M survivors (sampling-noise
-        tail, ~0.1 %) are recomputed exactly through the dense scan.
-        Returns the (U, M) shortlist table.
+        they are all > tau).  Rows with < M *observed* survivors
+        (sampling-noise tail, ~0.1 %) are recomputed exactly through
+        the dense scan.  Returns the (U, M) shortlist table.
+
+        Fat budgets: ``oversample`` is the threshold ladder level
+        (``_sym_level``) — lower levels trade survivor mass for a
+        slightly longer fallback tail.  Peak survivor memory is bounded
+        at *any* level by panelized spilling: when a row block's pending
+        entries exceed ``_SYM_COMPACT_FACTOR`` times its expected mass,
+        they are folded down to the per-row canonical top-M.  The fold
+        is exact — every entry it drops is canonically after ≥ M kept
+        survivors of its row, so it can never re-enter the final top-M —
+        and the ``seen`` tally (observed counts, accumulated before the
+        fold) keeps the < M certificate honest.
         """
         n = self.n_users
         m = max_rerank
@@ -1386,6 +1651,11 @@ class ClusteredIndex(_SpillClusterCore):
         scr = scr_t.numpy() if use_t else np.empty((bq, bq), np.float32)
         taus = np.empty(n, np.float32)
         tri: List[list] = [[] for _ in range(nb)]   # (rows, cols, vals)
+        nvs = [min((b + 1) * bq, n) - b * bq for b in range(nb)]
+        seen = np.zeros(n, np.int64)     # observed survivors per row
+        pend = np.zeros(nb, np.int64)    # pending (uncompacted) entries
+        cap = max(int(_SYM_COMPACT_FACTOR * oversample * m),
+                  _SYM_COMPACT_MIN)
 
         def mm_block(i0, i1, j0, j1):
             if use_t:
@@ -1395,6 +1665,23 @@ class ClusteredIndex(_SpillClusterCore):
             view = scr[:i1 - i0, :j1 - j0]
             np.matmul(p_np[i0:i1], p_np[j0:j1].T, out=view)
             return view
+
+        def compact(dst):
+            """Panelized survivor spilling: fold ``dst``'s pending
+            triplets to the per-row canonical top-M (exact — see the
+            docstring; ``seen`` already holds the observed tally)."""
+            rows = np.concatenate([t[0] for t in tri[dst]])
+            cols = np.concatenate([t[1] for t in tri[dst]])
+            vals = np.concatenate([t[2] for t in tri[dst]])
+            indptr, grp_i, grp_v = _sym_group(rows, cols, vals,
+                                              nvs[dst], n)
+            padv, padi = _sym_pad(indptr, grp_i, grp_v, nvs[dst], n)
+            selv, sel = _topm_rows(padv, min(m, padv.shape[1]))
+            picked = np.take_along_axis(padi, sel, axis=1)
+            rr, cc = np.nonzero(~np.isneginf(selv))
+            tri[dst] = [(rr.astype(np.int32), picked[rr, cc],
+                         selv[rr, cc].astype(np.float32))]
+            pend[dst] = len(rr)
 
         def collect(dst, s, mask, col0, transpose):
             """Append ``mask`` survivors of block ``s`` to row side
@@ -1409,9 +1696,14 @@ class ClusteredIndex(_SpillClusterCore):
                 r, c = c, r
             tri[dst].append((r.astype(np.int32),
                              (col0 + c).astype(np.int32), vals))
+            d0 = dst * bq
+            seen[d0:d0 + nvs[dst]] += np.bincount(r, minlength=nvs[dst])
+            pend[dst] += len(flat)
+            if pend[dst] > cap * nvs[dst]:
+                compact(dst)
 
         # phase 1 — diagonal blocks: thresholds + own survivors
-        ks = max(1, int(_SYM_OVERSAMPLE * m * bq / n))
+        ks = max(1, int(oversample * m * bq / n))
         for bi in range(nb):
             i0, i1 = bi * bq, min((bi + 1) * bq, n)
             s = mm_block(i0, i1, i0, i1)
@@ -1443,42 +1735,23 @@ class ClusteredIndex(_SpillClusterCore):
                 collect(bj, s, s > taus[j0:j1][None, :], i0, True)
 
         # phase 3 — per-row-block survivor assembly + canonical top-M
+        # (the certificate reads the *observed* tally: a compaction fold
+        # may keep exactly M entries for a row that saw more)
         shorts = np.full((n, m), n, np.int32)
         fallback: list = []
         for bi in range(nb):
             i0, i1 = bi * bq, min((bi + 1) * bq, n)
             nv = i1 - i0
+            fb = np.nonzero(seen[i0:i1] < m)[0]
+            fallback.extend((i0 + fb).tolist())
             if not tri[bi]:
-                fallback.extend(range(i0, i1))
                 continue
             rows = np.concatenate([t[0] for t in tri[bi]])
             cols = np.concatenate([t[1] for t in tri[bi]])
             vals = np.concatenate([t[2] for t in tri[bi]])
-            # COO→CSR is an O(n) counting sort grouping survivors by row
-            # with ascending candidate ids — which makes the padded
-            # table's column order canonical for tie repair
-            if _scipy_sparse is not None:
-                a = _scipy_sparse.coo_matrix(
-                    (vals, (rows, cols)), shape=(nv, n)).tocsr()
-                indptr, grp_i, grp_v = a.indptr, a.indices, a.data
-            else:
-                order = np.lexsort((cols, rows))
-                rows, grp_i, grp_v = rows[order], cols[order], vals[order]
-                indptr = np.zeros(nv + 1, np.int64)
-                np.cumsum(np.bincount(rows, minlength=nv),
-                          out=indptr[1:])
-            cnt = np.diff(indptr)
-            fb = np.nonzero(cnt < m)[0]
-            fallback.extend((i0 + fb).tolist())
-            w = int(cnt.max())
-            padv = np.full((nv, w), -np.inf, np.float32)
-            padi = np.full((nv, w), n, np.int32)
-            rr = np.repeat(np.arange(nv), cnt)
-            within = np.arange(len(grp_v)) - np.repeat(
-                indptr[:-1].astype(np.int64), cnt)
-            padv[rr, within] = grp_v
-            padi[rr, within] = grp_i
-            selv, sel = _topm_rows(padv, min(m, w))
+            indptr, grp_i, grp_v = _sym_group(rows, cols, vals, nv, n)
+            padv, padi = _sym_pad(indptr, grp_i, grp_v, nv, n)
+            selv, sel = _topm_rows(padv, min(m, padv.shape[1]))
             picked = np.take_along_axis(padi, sel, axis=1)
             shorts[i0:i1, :picked.shape[1]] = np.where(
                 np.isneginf(selv), n, picked)
@@ -1506,7 +1779,16 @@ class ClusteredIndex(_SpillClusterCore):
         rerank budget go straight through the shared-matmul exact path
         (also the bit-exact degenerate mode).  All scan modes share the
         canonical ``(-score, id)`` selection policy, so they agree bit
-        for bit wherever their candidate pools coincide.
+        for bit wherever their candidate pools coincide.  Under
+        ``query_mode="fused"`` both passes run as one device-resident
+        chain per block (``_query_fused``) — same candidate semantics,
+        bit-identical results for integer rating matrices.
+
+        Stage timers: the rerank stage is *measured* (every exact-scoring
+        interval, whichever pass it runs in) and the shortlist stage
+        absorbs the remainder of the wall clock, so
+        ``seconds_shortlist + seconds_rerank == seconds_total`` exactly
+        on every scan and query mode.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -1520,46 +1802,94 @@ class ClusteredIndex(_SpillClusterCore):
         out_i = np.empty((len(uids), k), np.int32)
         n_probed = 0
         n_reranked = 0
-        t_short = 0.0
         t_rerank = 0.0
         t_begin = time.perf_counter()
 
         scan = self._scan_mode(n_probe) if max_rerank else "pool"
+        qmode = self._query_mode() if max_rerank else "staged"
         # pool shortcut: candidates = the whole population, no per-block
         # probing — always for the device scan (it never materialises the
-        # score matrix), on the host when probing saturates the pool
-        # (n_probe·spill ≥ C: every user's spill list meets the probes)
+        # score matrix; the fused chain's pool branch is the same scan),
+        # on the host when probing saturates the pool (n_probe·spill ≥ C:
+        # every user's spill list meets the probes)
         pool_all = (bool(max_rerank) and max_rerank < self.n_users
                     and (scan == "kernel"
+                         or (qmode == "fused" and scan == "pool")
                          or (scan == "pool"
                              and n_probe * self.spill_ids.shape[1]
                              >= self.n_clusters)))
-        # host proxy table only exists where a host scan runs; the device
-        # scan and the unfiltered/degenerate mode never pay the copy
+        full_pop = np.array_equal(uids, np.arange(self.n_users))
+        sym_use, scan_gate = ((False, "") if not max_rerank else
+                              self._sym_eligibility(max_rerank, scan,
+                                                    pool_all, full_pop,
+                                                    qmode))
+        # host proxy table only exists where a host scan runs; the fused
+        # chain, the device scan, and the unfiltered/degenerate mode
+        # never pay the copy
         p_np = (self._proxies_np()
-                if max_rerank and scan != "kernel" else None)
+                if max_rerank and scan != "kernel" and qmode != "fused"
+                else None)
         if pool_all:
             # no per-block probe work here, so score in tall blocks — the
             # (bq, p)·(p, U) GEMM runs ~2.5× faster at bq=2048 than 256
             bq = min(2048, _bucket(len(uids)))
+        mode = ("fused" if qmode == "fused" and max_rerank
+                else self._rerank_mode(max_rerank))
+
+        if qmode == "fused" and max_rerank:
+            n_probed, n_reranked, t_rerank = self._query_fused(
+                ratings, uids, out_s, out_i, k=k, measure=measure,
+                beta=beta, n_probe=n_probe, max_rerank=max_rerank,
+                pool_all=pool_all, bq=bq)
+        else:
+            n_probed, n_reranked, t_rerank = self._query_staged(
+                ratings, uids, out_s, out_i, k=k, measure=measure,
+                beta=beta, n_probe=n_probe, max_rerank=max_rerank,
+                scan=scan, pool_all=pool_all, bq=bq, p_np=p_np,
+                sym_use=sym_use, mode=mode)
+
+        # rerank is measured, shortlist absorbs the remainder — so the
+        # two stages partition seconds_total exactly by construction
+        t_short = max(time.perf_counter() - t_begin - t_rerank, 0.0)
+        self.last_query = QueryStats(n_queries=len(uids),
+                                     n_users=self.n_users,
+                                     n_probed=n_probed,
+                                     n_reranked=n_reranked,
+                                     seconds_shortlist=t_short,
+                                     seconds_rerank=t_rerank,
+                                     seconds_total=t_short + t_rerank,
+                                     rerank_mode=mode,
+                                     scan_mode=scan if max_rerank else "",
+                                     query_mode=qmode,
+                                     scan_gate=scan_gate)
+        return jnp.asarray(out_s), jnp.asarray(out_i)
+
+    def _query_staged(self, ratings, uids, out_s, out_i, *, k, measure,
+                      beta, n_probe, max_rerank, scan, pool_all, bq,
+                      p_np, sym_use, mode):
+        """The two-pass host-orchestrated pipeline (shortlists round-trip
+        through host memory between the scan and the exact rerank) —
+        also the bit-exact oracle the fused chain is pinned against.
+        Returns ``(n_probed, n_reranked, seconds_rerank)``."""
+        n_probed = 0
+        n_reranked = 0
+        t_rerank = 0.0
         mc = self.member_counts() if scan == "cluster" else None
         spill = self.spill_ids.shape[1]
         pend_pos: list = []        # output row ranges awaiting pass 2
         pend_short: list = []      # their (nv, max_rerank) shortlists
 
         # pass 1 — shortlist scan (see the class docstring's stage map)
-        if pool_all and scan == "pool" \
-                and self._use_symmetric(len(uids), max_rerank) \
-                and np.array_equal(uids, np.arange(self.n_users)):
-            shorts_all = self._scan_symmetric(p_np, max_rerank, bq)
+        if sym_use:
+            shorts_all = self._scan_symmetric(
+                p_np, max_rerank, bq,
+                oversample=self._sym_level(max_rerank))
             n_probed += len(uids) * self.n_users
             n_reranked += int((shorts_all < self.n_users).sum())
             pend_pos.append(np.arange(len(uids)))
             pend_short.append(shorts_all)
-            t_short += time.perf_counter() - t_begin
         else:
             for lo in range(0, len(uids), bq):
-                t0 = time.perf_counter()
                 ids = uids[lo:lo + bq]
                 nv = len(ids)
                 ids_pad = np.full((bq,), self.n_users, np.int32)
@@ -1573,7 +1903,6 @@ class ClusteredIndex(_SpillClusterCore):
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
                     pend_short.append(short_np)
-                    t_short += time.perf_counter() - t0
                     continue
                 ids_j = jnp.asarray(ids_pad)
                 probe = np.asarray(_probe_clusters(
@@ -1591,7 +1920,6 @@ class ClusteredIndex(_SpillClusterCore):
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
                     pend_short.append(short_np)
-                    t_short += time.perf_counter() - t0
                     continue
                 cand = np.unique(np.concatenate(
                     [self._members[c] for c in clusters]))
@@ -1606,7 +1934,6 @@ class ClusteredIndex(_SpillClusterCore):
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
                     pend_short.append(short_np)
-                    t_short += time.perf_counter() - t0
                     continue
                 # unfiltered path: exact per-query probe semantics — a
                 # candidate counts iff one of its spill clusters was probed
@@ -1625,7 +1952,6 @@ class ClusteredIndex(_SpillClusterCore):
                 # though it runs inside pass 1 (the stage timers must
                 # partition the wall total — see QueryStats)
                 t_mid = time.perf_counter()
-                t_short += t_mid - t0
                 s, i = _rerank_shared(ratings, ids_j, jnp.asarray(cand_pad),
                                       jnp.asarray(allowed), k=k,
                                       measure=measure, beta=beta)
@@ -1634,7 +1960,6 @@ class ClusteredIndex(_SpillClusterCore):
                 t_rerank += time.perf_counter() - t_mid
 
         # pass 2 — exact rerank of the shortlists
-        mode = self._rerank_mode(max_rerank)
         if pend_pos:
             t0 = time.perf_counter()
             pos = np.concatenate(pend_pos)
@@ -1653,18 +1978,97 @@ class ClusteredIndex(_SpillClusterCore):
                                     measure=measure, beta=beta,
                                     max_rerank=max_rerank)
             t_rerank += time.perf_counter() - t0
+        return n_probed, n_reranked, t_rerank
 
-        self.last_query = QueryStats(n_queries=len(uids),
-                                     n_users=self.n_users,
-                                     n_probed=n_probed,
-                                     n_reranked=n_reranked,
-                                     seconds_shortlist=t_short,
-                                     seconds_rerank=t_rerank,
-                                     seconds_total=(time.perf_counter()
-                                                    - t_begin),
-                                     rerank_mode=mode,
-                                     scan_mode=scan if max_rerank else "")
-        return jnp.asarray(out_s), jnp.asarray(out_i)
+    def _query_fused(self, ratings, uids, out_s, out_i, *, k, measure,
+                     beta, n_probe, max_rerank, pool_all, bq):
+        """The fused query pipeline: per query block, proxy scan →
+        canonical top-M shortlist → candidate-union gather → exact
+        co-rated Gram rerank stream through device memory, with scores
+        and shortlist id lists never returning to the host (the cluster
+        branch's probe ids and member-table unions — pre-score data —
+        are the only host round-trips).  Two jitted calls per block keep
+        the stage timers separable; the ``shorts`` array handed between
+        them stays a device array.
+
+        The scan is the *same* jitted computation the staged kernel path
+        dispatches, and every Gram statistic is an exactly-representable
+        f32 integer for integer rating matrices — so the fused output is
+        bit-identical to the staged gather-walk oracle (pinned across
+        all four measures in ``tests/test_fused_query.py``).  Returns
+        ``(n_probed, n_reranked, seconds_rerank)``."""
+        n = self.n_users
+        use_pallas = self._use_kernel() or self.cfg.interpret
+        interpret = self.cfg.interpret
+        m = min(max_rerank, n)
+        r_gather = self._gather_source(ratings)
+        norms, counts = _user_norms_counts(ratings)
+        n_probed = 0
+        n_reranked = 0
+        t_rerank = 0.0
+
+        for lo in range(0, len(uids), bq):
+            ids = uids[lo:lo + bq]
+            nv = len(ids)
+            ids_pad = np.full((bq,), n, np.int32)
+            ids_pad[:nv] = ids
+            ids_j = jnp.asarray(ids_pad)
+            if pool_all:
+                _, shorts = _fused_scan_pool(self.proxies, ids_j, m=m,
+                                             use_pallas=use_pallas,
+                                             interpret=interpret)
+                n_probed += nv * n
+            else:
+                probe = np.asarray(_probe_clusters(
+                    self.proxies, self.centroids, ids_j, n_probe=n_probe,
+                    use_kernel=self._use_kernel(), interpret=interpret))
+                clusters = np.unique(probe[:nv])
+                # ascending candidate ids make the restricted select's
+                # block-local tie-break the canonical global-id order
+                cand = np.sort(self._cluster_candidates(clusters))
+                L = _bucket(len(cand))
+                cand_pad = np.full((L,), n, np.int32)
+                cand_pad[:len(cand)] = cand
+                if max_rerank >= len(cand):
+                    # unfiltered block: the candidate union already fits
+                    # the budget — straight to the shared-matmul exact
+                    # path (identical to the staged degenerate mode)
+                    allowed = np.zeros((bq, L), bool)
+                    probed_tbl = np.zeros((nv, self.n_clusters), bool)
+                    probed_tbl[np.arange(nv)[:, None], probe[:nv]] = True
+                    sp_c = self.spill_ids[cand]
+                    allowed[:nv, :len(cand)] = probed_tbl[:, sp_c].any(-1)
+                    n_pairs = int((allowed[:nv] & (cand_pad[None, :]
+                                                   != ids[:, None])).sum())
+                    n_probed += n_pairs
+                    n_reranked += n_pairs
+                    t_mid = time.perf_counter()
+                    s, i = _rerank_shared(ratings, ids_j,
+                                          jnp.asarray(cand_pad),
+                                          jnp.asarray(allowed), k=k,
+                                          measure=measure, beta=beta)
+                    out_s[lo:lo + bq] = np.asarray(s)[:nv]
+                    out_i[lo:lo + bq] = np.asarray(i)[:nv]
+                    t_rerank += time.perf_counter() - t_mid
+                    continue
+                _, shorts = _fused_scan_restricted(
+                    self.proxies, jnp.asarray(cand_pad), ids_j, m=m,
+                    use_pallas=use_pallas, interpret=interpret)
+                n_probed += nv * len(cand)
+            # the count sync below also fences the scan, so its cost
+            # lands in the shortlist stage (rerank timing starts after)
+            n_reranked += int(jnp.sum(shorts[:nv] < n))
+            ku = _bucket(min(bq * shorts.shape[1], n) + 1)
+            t0 = time.perf_counter()
+            s, i = _fused_rerank_block(r_gather, ratings, norms, counts,
+                                       ids_j, shorts, ku=ku, k=k,
+                                       measure=measure, beta=beta,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
+            out_s[lo:lo + bq] = np.asarray(s)[:nv]
+            out_i[lo:lo + bq] = np.asarray(i)[:nv]
+            t_rerank += time.perf_counter() - t0
+        return n_probed, n_reranked, t_rerank
 
     def _rerank_gather(self, ratings, norms, counts, q_all, shorts, pos,
                        out_s, out_i, *, k, measure, beta, max_rerank):

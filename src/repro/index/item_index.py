@@ -493,6 +493,10 @@ class ItemClusteredIndex(_SpillClusterCore):
                     sp = np.array(np.asarray(sp_dev)[:nv])
                     selv, sel = _topm_rows(sp, m_short,
                                            col_ids=cand_pad)
+                # sel uses the sentinel id len(cand_pad) for -inf slots;
+                # clamp before the gather, then mask — never index a
+                # member table through a dead slot
+                sel = np.minimum(sel, len(cand_pad) - 1)
                 short = np.where(np.isneginf(selv), self.n_items,
                                  cand_pad[sel]).astype(np.int32)
                 short = np.sort(short, axis=1)   # ascending → monotone

@@ -99,11 +99,14 @@ def support_scores_ref(dev: jnp.ndarray, msk: jnp.ndarray,
 def select_topm_ref(scores: jnp.ndarray, m: int):
     """(Q, N) scores → canonical top-``m``: ``(values, ids)`` under the
     exact engines' ``(-score, id)`` order (descending score, ties to the
-    lower id).  Oracle for ``repro.kernels.select`` — the selection
-    policy every shortlist scan mode must reproduce bit for bit."""
+    lower id).  Every ``-inf`` slot (knockout or starved-row padding)
+    carries the sentinel id ``N`` so no dead slot can alias a real row.
+    Oracle for ``repro.kernels.select`` — the selection policy every
+    shortlist scan mode must reproduce bit for bit."""
     n = scores.shape[1]
     ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
                            scores.shape)
+    ids = jnp.where(jnp.isneginf(scores), n, ids)
     neg_sorted, idx_sorted = jax.lax.sort((-scores, ids), num_keys=2)
     m = min(m, n)
     return -neg_sorted[:, :m], idx_sorted[:, :m]

@@ -180,6 +180,26 @@ def fused_rerank_scores(q_vals: jnp.ndarray, cand_rows: jnp.ndarray,
     return out[:g, :kc]
 
 
+@functools.partial(jax.jit, static_argnames=("measure", "beta"))
+def rerank_scores_xla(q_vals: jnp.ndarray, cand_rows: jnp.ndarray,
+                      cand_norms: jnp.ndarray, cand_counts: jnp.ndarray,
+                      *, measure: str = "cosine",
+                      beta: float = 50.0) -> jnp.ndarray:
+    """XLA twin of :func:`fused_rerank_scores`: the same union-Gram
+    statistics as one jitted jnp pass — the fused query pipeline's rerank
+    stage wherever the Pallas kernel does not run.  Delegates to the jnp
+    oracle (``ref.rerank_scores_ref``), so the twin is the oracle by
+    construction; for integer rating matrices it is bit-identical to the
+    kernel, the host BLAS twin, and the sparse gather walk.
+    """
+    if measure not in MEASURES:
+        raise ValueError(f"unknown measure {measure!r}; want one of "
+                         f"{MEASURES}")
+    from repro.kernels import ref
+    return ref.rerank_scores_ref(q_vals, cand_rows, cand_norms,
+                                 cand_counts, measure=measure, beta=beta)
+
+
 def rerank_scores_host(q_vals: np.ndarray, cand_rows: np.ndarray,
                        cand_norms: np.ndarray, cand_counts: np.ndarray,
                        *, measure: str = "cosine",

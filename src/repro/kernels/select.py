@@ -86,6 +86,10 @@ def _topm_step(s, qid_ref, val_ref, idx_ref, acc_v, acc_i, *, n_j: int,
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     invalid = (col >= n_valid) | (col == qid_ref[...])
     s = jnp.where(invalid, _NEG_INF, s)
+    # sentinel policy: every -inf slot (knockout here, or a precomputed
+    # knockout in the caller's scores) carries id n_valid, so downstream
+    # gathers can never silently index a real row through a dead slot
+    col = jnp.where(jnp.isneginf(s), n_valid, col)
     acc_v[...], acc_i[...] = _merge_topm(acc_v[...], acc_i[...], s, col,
                                          m_pad)
 
@@ -213,4 +217,5 @@ def scan_topm_xla(q: jnp.ndarray, proxies: jnp.ndarray,
                                          recall_target=recall_target)
     else:
         vals, ids = jax.lax.top_k(s, m)
+    ids = jnp.where(jnp.isneginf(vals), n, ids)   # sentinel policy
     return vals, ids.astype(jnp.int32)

@@ -1,0 +1,107 @@
+"""Compiled (Mosaic) lowering smoke tests + CPU interpret sweeps.
+
+The interpret-mode suites pin kernel *semantics*; nothing there proves
+the kernels still lower through Mosaic on a real accelerator.  The
+TPU-gated tests here compile the two fused query-pipeline kernels — the
+blockwise select's in-kernel ``lax.sort`` top-M merge and the grouped
+union-Gram rerank — and pin the compiled outputs against the jnp
+oracles.  Off-TPU they skip (Mosaic does not target CPU); the
+CPU-runnable part is an interpret-vs-oracle sweep over odd, misaligned
+block shapes, which catches grid/padding bugs that the default-aligned
+suites never exercise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.rerank import fused_rerank_scores
+from repro.kernels.select import fused_scan_topm, select_topm
+
+requires_tpu = pytest.mark.skipif(
+    jax.default_backend() != "tpu",
+    reason="Mosaic lowering needs a TPU backend (interpret-mode "
+           "semantics are pinned in the CPU suites)")
+
+
+def _scan_case(rng, q_n, n, p):
+    q = jnp.asarray(rng.normal(size=(q_n, p)).astype(np.float32))
+    prox = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    return q, prox, jnp.asarray(np.arange(q_n, dtype=np.int32))
+
+
+def _rerank_case(rng, g, kc, j):
+    vq = (rng.integers(1, 6, (g, j))
+          * (rng.random((g, j)) < 0.4)).astype(np.float32)
+    rc = (rng.integers(1, 6, (kc, j))
+          * (rng.random((kc, j)) < 0.4)).astype(np.float32)
+    norms = np.sqrt((rc * rc).sum(1)).astype(np.float32)
+    counts = (rc > 0).sum(1).astype(np.float32)
+    return (jnp.asarray(vq), jnp.asarray(rc), jnp.asarray(norms),
+            jnp.asarray(counts))
+
+
+# -- compiled (Mosaic) smoke --------------------------------------------------
+
+@requires_tpu
+def test_select_merge_compiles_on_tpu(rng):
+    """The in-kernel two-key lax.sort running top-M merge must lower
+    through Mosaic and agree with the oracle bit for bit."""
+    q, prox, q_ids = _scan_case(rng, 256, 2048, 64)
+    m = 128
+    want_v, want_i = ref.scan_topm_ref(q, prox, q_ids, m)
+    got_v, got_i = fused_scan_topm(q, prox, q_ids, m=m, interpret=False)
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+    np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
+
+
+@requires_tpu
+@pytest.mark.parametrize("measure", ("cosine", "jaccard", "pcc",
+                                     "pcc_sig"))
+def test_rerank_kernel_compiles_on_tpu(measure, rng):
+    """The grouped union-Gram rerank kernel must lower through Mosaic;
+    integer ratings keep every Gram sum exact, so the compiled scores
+    match the oracle bitwise (1 ulp on the pcc_sig shrink)."""
+    vq, rc, norms, counts = _rerank_case(rng, 256, 512, 384)
+    want = np.asarray(ref.rerank_scores_ref(vq, rc, norms, counts,
+                                            measure=measure))
+    got = np.asarray(fused_rerank_scores(vq, rc, norms, counts,
+                                         measure=measure, interpret=False))
+    if measure == "pcc_sig":
+        np.testing.assert_allclose(got, want, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+# -- CPU odd-block interpret sweeps -------------------------------------------
+
+@pytest.mark.parametrize("blocks", [(8, 16, 32), (16, 48, 80),
+                                    (24, 16, 112)])
+def test_rerank_odd_blocks_sweep(blocks, rng):
+    """Misaligned (bm, bn, bk) against odd operand shapes: the padded
+    grid must never leak padding into the scores."""
+    bm, bn, bk = blocks
+    vq, rc, norms, counts = _rerank_case(rng, 29, 51, 173)
+    want = np.asarray(ref.rerank_scores_ref(vq, rc, norms, counts,
+                                            measure="pcc"))
+    got = np.asarray(fused_rerank_scores(vq, rc, norms, counts,
+                                         measure="pcc", bm=bm, bn=bn,
+                                         bk=bk, interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("blocks", [(8, 32), (16, 128), (32, 64)])
+def test_select_odd_blocks_sweep(blocks, rng):
+    """Odd (bq, bn) select grids over a non-divisible pool, knockouts
+    included — the running merge must stay canonical at every geometry."""
+    bq, bn = blocks
+    scores = rng.normal(size=(27, 211)).astype(np.float32)
+    scores[rng.random(scores.shape) < 0.15] = -np.inf
+    s_j = jnp.asarray(scores)
+    want_v, want_i = ref.select_topm_ref(s_j, 19)
+    got_v, got_i = select_topm(s_j, jnp.full((27,), -1, jnp.int32), m=19,
+                               bq=bq, bn=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+    np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))

@@ -11,7 +11,8 @@ import pytest
 from repro.core import similarity as sim
 from repro.index import ClusteredIndex, IndexConfig
 from repro.kernels import ref
-from repro.kernels.rerank import fused_rerank_scores, rerank_scores_host
+from repro.kernels.rerank import (fused_rerank_scores, rerank_scores_host,
+                                  rerank_scores_xla)
 
 MEASURES = ("cosine", "jaccard", "pcc", "pcc_sig")
 
@@ -67,6 +68,26 @@ def test_rerank_host_twin_bit_matches_oracle(measure, rng):
         np.testing.assert_allclose(got, want, atol=1e-6)
     else:
         np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_rerank_xla_twin_matches_kernel(measure, rng):
+    """The fused query pipeline's off-TPU rerank stage: the jitted XLA
+    twin is the oracle by construction and must agree with the Pallas
+    kernel bit for bit (1 ulp on pcc_sig) — and it must reject unknown
+    measures like every other form."""
+    vq, rc, norms, counts = _operands(rng, 11, 29, 61)
+    args = (jnp.asarray(vq), jnp.asarray(rc), jnp.asarray(norms),
+            jnp.asarray(counts))
+    twin = np.asarray(rerank_scores_xla(*args, measure=measure))
+    kern = np.asarray(fused_rerank_scores(*args, measure=measure, bm=8,
+                                          bn=16, bk=32, interpret=True))
+    if measure == "pcc_sig":
+        np.testing.assert_allclose(twin, kern, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(twin, kern)
+    with pytest.raises(ValueError, match="measure"):
+        rerank_scores_xla(*args, measure="hamming")
 
 
 def test_rerank_kernel_int8_source(rng):

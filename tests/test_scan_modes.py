@@ -205,19 +205,125 @@ def test_cluster_scan_restricts_candidates(rng):
 
 
 def test_stage_timers_partition_total(rng):
-    """QueryStats: shortlist + rerank must account for the whole call
-    (the pass-1 unfiltered blocks' exact scoring counts as rerank)."""
+    """QueryStats: shortlist + rerank must partition the call *exactly*
+    on every scan and query mode — rerank is measured, shortlist absorbs
+    the remainder (the pass-1 unfiltered blocks' exact scoring counts as
+    rerank), and their sum defines the total by construction."""
     r = _ratings(rng, 200, 64)
     means = sim.user_stats(r)[2]
     for kw in (dict(rerank_frac=0.3),          # filtered (scan + rerank)
                dict(rerank_frac=0.0),          # degenerate (pass-1 rerank)
-               dict(rerank_frac=0.3, n_probe=3)):   # mixed blocks
+               dict(rerank_frac=0.3, n_probe=3),    # mixed blocks
+               dict(rerank_frac=0.3, scan_symmetric=True),
+               dict(rerank_frac=0.3, query_mode="fused"),
+               dict(rerank_frac=0.3, n_probe=3, query_mode="fused")):
         ix = _fit(r, means, "auto", **kw)
         ix.query(r, means, k=6, measure="cosine")
         st = ix.last_query
-        gap = st.seconds_total - (st.seconds_shortlist + st.seconds_rerank)
-        assert gap >= -1e-6, st
-        assert gap <= 0.1 * st.seconds_total + 0.02, st
+        assert st.seconds_total == st.seconds_shortlist + st.seconds_rerank, \
+            (kw, st)
+        assert st.seconds_shortlist >= 0.0 and st.seconds_rerank >= 0.0, st
+
+
+# -- symmetric-scan gate ------------------------------------------------------
+
+def test_scan_gate_reason_recorded(rng):
+    """QueryStats.scan_gate must say which scan ran and why — one reason
+    string per resolved configuration, never empty when a scan ran."""
+    r = _ratings(rng, 128, 64)
+    means = sim.user_stats(r)[2]
+    ix = _fit(r, means, "pool", scan_symmetric=True)
+    ix.query(r, means, k=6, measure="cosine")
+    assert ix.last_query.scan_gate.startswith("sym:on:level="), \
+        ix.last_query.scan_gate
+    ix.cfg = dataclasses.replace(ix.cfg, scan_symmetric=False)
+    ix.query(r, means, k=6, measure="cosine")
+    assert ix.last_query.scan_gate == "sym:off:config"
+    ix.cfg = dataclasses.replace(ix.cfg, scan_symmetric=None)
+    ix.query(r, means, np.arange(0, 128, 3, dtype=np.int32), k=6,
+             measure="cosine")
+    assert ix.last_query.scan_gate == "sym:off:subset-queries"
+    ix.cfg = dataclasses.replace(ix.cfg, query_mode="fused")
+    ix.query(r, means, k=6, measure="cosine")
+    assert ix.last_query.scan_gate == "sym:off:fused"
+
+
+def test_forced_symmetric_ineligible_raises(rng):
+    """cfg.scan_symmetric=True on a hard-ineligible configuration must
+    raise instead of silently running a different scan."""
+    r = _ratings(rng, 128, 64)
+    means = sim.user_stats(r)[2]
+    # fused query mode keeps the scan on device
+    ix = _fit(r, means, "pool", scan_symmetric=True, query_mode="fused")
+    with pytest.raises(ValueError, match="scan_symmetric"):
+        ix.query(r, means, k=6, measure="cosine")
+    # a non-pool scan has no symmetric GEMM schedule to halve
+    ix = _fit(r, means, "cluster", scan_symmetric=True)
+    with pytest.raises(ValueError, match="scan_symmetric"):
+        ix.query(r, means, k=6, measure="cosine")
+    # a subset query set has no full pair population
+    ix = _fit(r, means, "pool", scan_symmetric=True)
+    with pytest.raises(ValueError, match="scan_symmetric"):
+        ix.query(r, means, np.arange(10, dtype=np.int32), k=6,
+                 measure="cosine")
+
+
+def test_forced_symmetric_fat_budget_runs_leveled(rng, monkeypatch):
+    """Fat rerank budgets no longer hard-disable a forced symmetric scan:
+    it degrades through the oversample ladder and must still match the
+    plain scan bit for bit, recording the resolved level."""
+    r = _ratings(rng, 260, 64)
+    means = sim.user_stats(r)[2]
+    # squeeze the byte budget so the ladder resolves below the default
+    monkeypatch.setattr(cl, "_SYM_MAX_BYTES",
+                        int(1.3 * int(0.5 * 260) * 260 * 12))
+    ix = _fit(r, means, "pool", rerank_frac=0.5, scan_symmetric=True)
+    s1, i1 = ix.query(r, means, k=8, measure="cosine")
+    st = ix.last_query
+    assert st.scan_gate == "sym:on:level=1.25", st.scan_gate
+    ix.cfg = dataclasses.replace(ix.cfg, scan_symmetric=False)
+    s2, i2 = ix.query(r, means, k=8, measure="cosine")
+    assert ix.last_query.scan_gate == "sym:off:config"
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_symmetric_compaction_is_exact(rng, monkeypatch):
+    """Panelized survivor spilling: with the compaction threshold forced
+    low the fold must fire repeatedly mid-scan, and the folded scan's
+    shortlists must still equal the dense scan's — any entry the fold
+    drops is canonically after ≥ M kept survivors of its row."""
+    r = _ratings(rng, 330, 64)
+    means = sim.user_stats(r)[2]
+    ix = _fit(r, means, "pool")
+    folds = []
+    orig_pad = cl._sym_pad
+
+    def counting_pad(*a, **kw):
+        folds.append(1)
+        return orig_pad(*a, **kw)
+
+    monkeypatch.setattr(cl, "_sym_pad", counting_pad)
+    monkeypatch.setattr(cl, "_SYM_COMPACT_FACTOR", 0.5)
+    monkeypatch.setattr(cl, "_SYM_COMPACT_MIN", 8)
+    p_np = ix._proxies_np()
+    got = np.sort(ix._scan_symmetric(p_np, 20, 64, oversample=1.1),
+                  axis=1)
+    n_blocks = -(-330 // 64)
+    assert len(folds) > n_blocks     # fired beyond the phase-3 assembly
+    want = np.sort(ix._scan_dense_block(
+        p_np, np.arange(330, dtype=np.int32), None, 20), axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_auto_symmetric_fat_budget_prefers_plain(rng):
+    """Auto (scan_symmetric=None) still routes fat budgets to the plain
+    streaming scan — and records the reason."""
+    r = _ratings(rng, 200, 64)
+    means = sim.user_stats(r)[2]
+    ix = _fit(r, means, "pool", rerank_frac=0.5)
+    ix.query(r, means, k=6, measure="cosine")
+    assert ix.last_query.scan_gate == "sym:off:fat-budget"
 
 
 # -- canonical selection helpers ---------------------------------------------

@@ -81,6 +81,38 @@ def test_select_topm_matches_oracle(rng):
     np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
 
 
+def test_starved_rows_return_sentinel_ids(rng):
+    """Rows with fewer than ``m`` live candidates must pad with
+    ``(-inf, N)`` — never a real column id that a downstream clamp-mode
+    gather would silently score (the row-0 aliasing bug)."""
+    n = 40
+    scores = rng.normal(size=(7, n)).astype(np.float32)
+    scores[:, 5:] = -np.inf                    # 5 live candidates per row
+    s_j = jnp.asarray(scores)
+    qid = jnp.full((7,), -1, jnp.int32)
+    for v, i in (ref.select_topm_ref(s_j, 12),
+                 select_topm(s_j, qid, m=12, bq=8, bn=32, interpret=True)):
+        v, i = np.asarray(v), np.asarray(i)
+        dead = np.isneginf(v)
+        assert dead.sum() == 7 * 7             # 12 - 5 starved slots/row
+        np.testing.assert_array_equal(i[dead], n)
+        assert (i[~dead] < 5).all()
+
+
+def test_starved_scan_sentinels(rng):
+    """Same contract for the fused proxy scan and the XLA twin when the
+    pool itself is smaller than ``m`` minus knockouts."""
+    q, prox, q_ids = _case(rng, 6, 6, 5)
+    q = prox                                   # self-knockout kills one
+    for fn in (lambda: fused_scan_topm(q, prox, q_ids, m=6, bq=8, bn=8,
+                                       interpret=True),
+               lambda: scan_topm_xla(q, prox, q_ids, m=6)):
+        v, i = (np.asarray(a) for a in fn())
+        dead = np.isneginf(v)
+        assert dead.any()
+        np.testing.assert_array_equal(i[dead], 6)
+
+
 def test_xla_twin_matches_oracle(rng):
     """lax.top_k breaks ties toward the lower index — the canonical
     policy — so the twin must agree with the oracle bit for bit."""
