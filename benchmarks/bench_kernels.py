@@ -33,11 +33,18 @@ from repro.kernels.similarity import fused_similarity
 RERANK_RECALL_FLOOR = 1.0
 
 
-def _time(f, *args, reps=5):
+def _time(f, *args, reps=5, name=None):
+    """Mean wall µs over ``reps`` fenced calls; per-rep walls also land in
+    the obs registry (histogram ``kernels.<name>.seconds``) when named."""
+    from repro import obs
     f(*args)  # compile
+    hist = obs.histogram(f"kernels.{name}.seconds") if name else None
     t0 = time.perf_counter()
     for _ in range(reps):
+        t1 = time.perf_counter()
         jax.block_until_ready(f(*args))
+        if hist is not None:
+            hist.observe(time.perf_counter() - t1)
     return (time.perf_counter() - t0) / reps * 1e6    # µs
 
 
@@ -61,7 +68,7 @@ def run():
         ra = jnp.asarray((rng.integers(1, 6, (m, d))
                           * (rng.random((m, d)) < 0.1)).astype(np.float32))
         xla_all = jax.jit(lambda a, b: ref.similarity_ref(a, b, "all"))
-        us_ref = _time(xla_all, ra, ra)
+        us_ref = _time(xla_all, ra, ra, name=f"xla_all3_{m}x{d}")
         rows.append({"name": f"xla_unfused_all3_{m}x{d}",
                      "us_per_call": us_ref,
                      "derived": f"flops={12 * m * m * d:.0f}"})
@@ -204,7 +211,7 @@ def run_rerank_smoke(rng, g: int = 48, kc: int = 160, j: int = 256,
                                  measure=measure))
         us_k = _time(lambda: fused_rerank_scores(
             *args_j, measure=measure, bm=16, bn=64, bk=128,
-            interpret=True), reps=2)
+            interpret=True), reps=2, name=f"rerank_{measure}")
         got_k = np.asarray(fused_rerank_scores(
             *args_j, measure=measure, bm=16, bn=64, bk=128,
             interpret=True))
@@ -231,8 +238,14 @@ def run_rerank_smoke(rng, g: int = 48, kc: int = 160, j: int = 256,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json-path", default="BENCH_kernels.json")
+    ap.add_argument("--metrics-path", default=None,
+                    help="dump the per-rep kernel-wall histograms")
     args = ap.parse_args()
     rows = run()
+    if args.metrics_path:
+        from repro import obs
+        obs.export_metrics(args.metrics_path)
+        print(f"wrote {args.metrics_path}")
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r.get('derived', '')}")

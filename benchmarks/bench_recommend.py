@@ -61,12 +61,14 @@ def _recall(ref_i: np.ndarray, got_i: np.ndarray) -> float:
 def run(sizes=DEFAULT_SIZES, n: int = 10, k: int = 40,
         measure: str = "cosine", n_items=None, seed: int = 0,
         shortlist: int = 64, item_kwargs=None) -> list:
+    from repro import obs
     from repro.core import CFEngine
     from repro.data import load_ml1m_synthetic
     from repro.index import IndexConfig, ItemIndexConfig
 
     rows = []
     for n_users in sizes:
+        obs.reset_metrics()
         train, _, _ = load_ml1m_synthetic(n_users=n_users, n_items=n_items,
                                           seed=seed)
         ratings = jnp.asarray(train)
@@ -123,6 +125,10 @@ def run(sizes=DEFAULT_SIZES, n: int = 10, k: int = 40,
             "recommend_speedup": round(speedup, 3),
             "recall_at_n": round(recall, 4),
             "rerank_fraction": round(frac, 4),
+            # registry-derived recommend wall (histogram bucket upper
+            # bound of the span duration — within 10^0.1 of approx_s)
+            "recommend_p50_s": round(obs.registry().histogram(
+                "item_index.recommend.seconds").quantile(0.5), 3),
         })
         print(f"U={n_users}: dense={dense_s:.1f}s approx={approx_s:.1f}s "
               f"speedup={speedup:.2f}x recall@{n}={recall:.4f} "

@@ -1,0 +1,86 @@
+"""Pretty-print a ``repro.obs`` chrome-trace JSON: slowest spans + rollup.
+
+Reads the artifact ``bench_index.py --trace-path`` (or any
+``obs.export_chrome_trace``) wrote and prints two tables:
+
+* the top-N slowest individual spans (name, duration, thread, the attrs
+  that explain the work — scan mode, block index, row counts);
+* a per-name rollup (count, total, mean, max) so "which *stage* dominates"
+  is answerable without loading Perfetto.
+
+    python benchmarks/trace_report.py TRACE_query.json [--top 15]
+
+No repro imports — the report runs anywhere the JSON artifact lands (a CI
+log, a laptop without jax).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+_META_ARGS = ("span_id", "parent_id")
+
+
+def load_spans(path: str) -> list:
+    """The trace's complete ("X") events: [{name, dur_us, tid, args}]."""
+    with open(path) as f:
+        doc = json.load(f)
+    thread_names = {}
+    spans = []
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            thread_names[ev.get("tid")] = ev["args"]["name"]
+        elif ev.get("ph") == "X":
+            spans.append(ev)
+    for ev in spans:
+        ev["thread"] = thread_names.get(ev.get("tid"), str(ev.get("tid")))
+    return spans
+
+
+def _fmt_attrs(args: dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in sorted(args.items())
+                    if k not in _META_ARGS)
+
+
+def report(path: str, top: int = 15) -> None:
+    spans = load_spans(path)
+    if not spans:
+        print(f"{path}: no spans")
+        return
+    total_us = sum(ev.get("dur", 0.0) for ev in spans)
+    print(f"{path}: {len(spans)} spans, {total_us / 1e6:.3f}s total "
+          f"span time (nested spans double-count)\n")
+
+    print(f"top {min(top, len(spans))} slowest spans")
+    print(f"{'dur_ms':>10}  {'name':<24} {'thread':<16} attrs")
+    for ev in sorted(spans, key=lambda e: -e.get("dur", 0.0))[:top]:
+        print(f"{ev.get('dur', 0.0) / 1e3:>10.3f}  {ev['name']:<24} "
+              f"{ev['thread']:<16} {_fmt_attrs(ev.get('args', {}))}")
+
+    rollup = defaultdict(lambda: [0, 0.0, 0.0])     # count, total, max
+    for ev in spans:
+        r = rollup[ev["name"]]
+        r[0] += 1
+        r[1] += ev.get("dur", 0.0)
+        r[2] = max(r[2], ev.get("dur", 0.0))
+    print("\nper-name rollup")
+    print(f"{'total_ms':>10} {'count':>6} {'mean_ms':>9} {'max_ms':>9}"
+          f"  name")
+    for name, (cnt, tot, mx) in sorted(rollup.items(),
+                                       key=lambda kv: -kv[1][1]):
+        print(f"{tot / 1e3:>10.3f} {cnt:>6} {tot / cnt / 1e3:>9.3f} "
+              f"{mx / 1e3:>9.3f}  {name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="chrome-trace JSON from obs export")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    report(args.trace, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -104,7 +104,9 @@ def main():
     print(f"{s['n_requests']} requests in {dt:.2f}s "
           f"({s['n_requests'] / dt:.1f} req/s)")
     print(f"latency p50={s['latency_p50_ms']:.1f}ms "
-          f"p99={s['latency_p99_ms']:.1f}ms")
+          f"p99={s['latency_p99_ms']:.1f}ms "
+          f"(queue {s['queue_wait_mean_ms']:.1f}ms, "
+          f"compute {s['compute_mean_ms']:.1f}ms)")
     print(f"batches: {s['n_batches']} "
           f"(mean fill {s['mean_batch_fill']:.2f}, "
           f"mean queue depth {s['mean_queue_depth']:.1f})")

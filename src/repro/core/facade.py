@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core import engine as dist_engine
 from repro.core import neighbors as nb
 from repro.core import predict as pred_mod
@@ -302,20 +303,27 @@ class CFEngine:
     def fit(self) -> "CFEngine":
         """Compute and cache top-k neighbors with the selected backend
         (exact mode) or through the clustered index (approx mode)."""
-        t0 = time.perf_counter()
-        self._cnt, self._tot, self.means = _user_stats(self.ratings)
-        if self.neighbor_mode == "approx":
-            self.index.fit(self.ratings, self.means)
-            self.scores, self.idx = self.index.query(
-                self.ratings, self.means, k=self.k, measure=self.measure,
-                beta=self.pcc_sig_beta)
-        else:
-            self.scores, self.idx = self._topk(self.ratings)
-        if self.item_index is not None:
-            self.item_index.fit(self.ratings, self.means)
-        self.scores = jax.block_until_ready(self.scores)
-        self._snapshot = (self.ratings, self.scores, self.idx, self.means)
-        self.fit_seconds = time.perf_counter() - t0
+        with obs.span("engine.fit", backend=self.backend,
+                      neighbor_mode=self.neighbor_mode,
+                      n_users=self.n_users, n_items=self.n_items) as sp:
+            self._cnt, self._tot, self.means = _user_stats(self.ratings)
+            if self.neighbor_mode == "approx":
+                self.index.fit(self.ratings, self.means)
+                self.scores, self.idx = self.index.query(
+                    self.ratings, self.means, k=self.k,
+                    measure=self.measure, beta=self.pcc_sig_beta)
+            else:
+                with obs.span("fit.topk", backend=self.backend):
+                    self.scores, self.idx = self._topk(self.ratings)
+            if self.item_index is not None:
+                self.item_index.fit(self.ratings, self.means)
+            self.scores = jax.block_until_ready(self.scores)
+            self._snapshot = (self.ratings, self.scores, self.idx,
+                              self.means)
+        self.fit_seconds = sp.duration
+        reg = obs.registry()
+        reg.histogram("engine.fit.seconds").observe(self.fit_seconds)
+        reg.gauge("engine.ratings_version").set(self.ratings_version)
         return self
 
     def _topk(self, ratings) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -353,7 +361,23 @@ class CFEngine:
             best_s, best_i = nb.merge_topk(best_s, best_i, s, ids, self.k)
         return best_s, best_i
 
+    def _obs_update(self, stats: UpdateStats) -> UpdateStats:
+        """Publish one ``update_ratings`` outcome to the registry (and to
+        the enclosing ``engine.update`` span)."""
+        sp = obs.current_span()
+        if sp is not None:
+            sp.set_attr("n_deltas", stats.n_deltas)
+            sp.set_attr("n_affected", stats.n_affected)
+        reg = obs.registry()
+        reg.counter("engine.update.count").inc()
+        reg.counter("engine.update.deltas").inc(stats.n_deltas)
+        reg.histogram("engine.update.seconds").observe(stats.seconds)
+        reg.gauge("engine.ratings_version").set(self.ratings_version)
+        self.last_update = stats
+        return stats
+
     # -- incremental update ------------------------------------------------
+    @obs.traced("engine.update")
     def update_ratings(self, user_ids, item_ids, values, *,
                        oracle_check: bool = False) -> UpdateStats:
         """Absorb a rating delta; cached neighbors stay exact (see module doc).
@@ -447,8 +471,7 @@ class CFEngine:
                 seconds=time.perf_counter() - t0)
             if oracle_check:
                 stats.oracle_ok = self._check_oracle()
-            self.last_update = stats
-            return stats
+            return self._obs_update(stats)
 
         # 2. one (U, |S|) Gram pass for the changed pairwise terms
         cross_s, cross_i = _cross_scores(self.ratings, pad_touch_j,
@@ -501,8 +524,7 @@ class CFEngine:
             seconds=time.perf_counter() - t0)
         if oracle_check:
             stats.oracle_ok = self._check_oracle()
-        self.last_update = stats
-        return stats
+        return self._obs_update(stats)
 
     def _check_oracle(self) -> bool:
         """Exact mode: assert cache == cold full recompute, bit for bit.

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import neighbors as nb
 from repro.core import predict as pred_mod
 from repro.core import similarity as sim
@@ -1345,16 +1346,21 @@ class ClusteredIndex(_SpillClusterCore):
             means = sim.user_stats(ratings)[2]
         self._resolve_sizes()
 
-        z = self._featurize(ratings, means)
-        p = min(self.cfg.project_dim, n_items)
-        if self.cfg.project_dim and p < n_items:
-            self.basis = jnp.asarray(
-                _svd_basis(np.asarray(z), p, self.cfg.seed))
-        else:
-            self.basis = None
-        self.proxies = (_project(z, self.basis)
-                        if self.basis is not None else z)
-        self._fit_clusters()
+        with obs.span("index.fit", device_sync=True, n_users=self.n_rows,
+                      n_items=n_items, n_clusters=self.n_clusters) as sp:
+            z = self._featurize(ratings, means)
+            p = min(self.cfg.project_dim, n_items)
+            if self.cfg.project_dim and p < n_items:
+                with obs.span("fit.svd_basis", dim=p):
+                    self.basis = jnp.asarray(
+                        _svd_basis(np.asarray(z), p, self.cfg.seed))
+            else:
+                self.basis = None
+            self.proxies = (_project(z, self.basis)
+                            if self.basis is not None else z)
+            self._fit_clusters()
+            sp.track(self.proxies)
+        obs.histogram("index.fit.seconds").observe(sp.duration)
         return self
 
     # auto rerank-mode split point: at rerank budgets ≥ ~8% of the pool
@@ -1803,54 +1809,69 @@ class ClusteredIndex(_SpillClusterCore):
         n_probed = 0
         n_reranked = 0
         t_rerank = 0.0
-        t_begin = time.perf_counter()
+        # the query root span *is* the total-time clock: rerank-stage
+        # child spans are measured, the shortlist stage absorbs the
+        # remainder, so the QueryStats partition invariant
+        # (shortlist + rerank == total, exactly) is derived from spans
+        qspan = obs.span("index.query", n_queries=len(uids), k=k,
+                         measure=measure)
+        qspan.__enter__()
+        try:
+            scan = self._scan_mode(n_probe) if max_rerank else "pool"
+            qmode = self._query_mode() if max_rerank else "staged"
+            # pool shortcut: candidates = the whole population, no per-block
+            # probing — always for the device scan (it never materialises
+            # the score matrix; the fused chain's pool branch is the same
+            # scan), on the host when probing saturates the pool
+            # (n_probe·spill ≥ C: every user's spill list meets the probes)
+            pool_all = (bool(max_rerank) and max_rerank < self.n_users
+                        and (scan == "kernel"
+                             or (qmode == "fused" and scan == "pool")
+                             or (scan == "pool"
+                                 and n_probe * self.spill_ids.shape[1]
+                                 >= self.n_clusters)))
+            full_pop = np.array_equal(uids, np.arange(self.n_users))
+            sym_use, scan_gate = ((False, "") if not max_rerank else
+                                  self._sym_eligibility(max_rerank, scan,
+                                                        pool_all, full_pop,
+                                                        qmode))
+            # host proxy table only exists where a host scan runs; the
+            # fused chain, the device scan, and the unfiltered/degenerate
+            # mode never pay the copy
+            p_np = (self._proxies_np()
+                    if max_rerank and scan != "kernel" and qmode != "fused"
+                    else None)
+            if pool_all:
+                # no per-block probe work here, so score in tall blocks —
+                # the (bq, p)·(p, U) GEMM runs ~2.5× faster at bq=2048
+                bq = min(2048, _bucket(len(uids)))
+            mode = ("fused" if qmode == "fused" and max_rerank
+                    else self._rerank_mode(max_rerank))
+            qspan.set_attr("scan_mode", scan if max_rerank else "")
+            qspan.set_attr("query_mode", qmode)
+            qspan.set_attr("scan_gate", scan_gate)
+            qspan.set_attr("rerank_mode", mode)
 
-        scan = self._scan_mode(n_probe) if max_rerank else "pool"
-        qmode = self._query_mode() if max_rerank else "staged"
-        # pool shortcut: candidates = the whole population, no per-block
-        # probing — always for the device scan (it never materialises the
-        # score matrix; the fused chain's pool branch is the same scan),
-        # on the host when probing saturates the pool (n_probe·spill ≥ C:
-        # every user's spill list meets the probes)
-        pool_all = (bool(max_rerank) and max_rerank < self.n_users
-                    and (scan == "kernel"
-                         or (qmode == "fused" and scan == "pool")
-                         or (scan == "pool"
-                             and n_probe * self.spill_ids.shape[1]
-                             >= self.n_clusters)))
-        full_pop = np.array_equal(uids, np.arange(self.n_users))
-        sym_use, scan_gate = ((False, "") if not max_rerank else
-                              self._sym_eligibility(max_rerank, scan,
-                                                    pool_all, full_pop,
-                                                    qmode))
-        # host proxy table only exists where a host scan runs; the fused
-        # chain, the device scan, and the unfiltered/degenerate mode
-        # never pay the copy
-        p_np = (self._proxies_np()
-                if max_rerank and scan != "kernel" and qmode != "fused"
-                else None)
-        if pool_all:
-            # no per-block probe work here, so score in tall blocks — the
-            # (bq, p)·(p, U) GEMM runs ~2.5× faster at bq=2048 than 256
-            bq = min(2048, _bucket(len(uids)))
-        mode = ("fused" if qmode == "fused" and max_rerank
-                else self._rerank_mode(max_rerank))
+            if qmode == "fused" and max_rerank:
+                n_probed, n_reranked, t_rerank = self._query_fused(
+                    ratings, uids, out_s, out_i, k=k, measure=measure,
+                    beta=beta, n_probe=n_probe, max_rerank=max_rerank,
+                    pool_all=pool_all, bq=bq)
+            else:
+                n_probed, n_reranked, t_rerank = self._query_staged(
+                    ratings, uids, out_s, out_i, k=k, measure=measure,
+                    beta=beta, n_probe=n_probe, max_rerank=max_rerank,
+                    scan=scan, pool_all=pool_all, bq=bq, p_np=p_np,
+                    sym_use=sym_use, mode=mode)
+            qspan.set_attr("n_probed", n_probed)
+            qspan.set_attr("n_reranked", n_reranked)
+        finally:
+            qspan.__exit__(None, None, None)
 
-        if qmode == "fused" and max_rerank:
-            n_probed, n_reranked, t_rerank = self._query_fused(
-                ratings, uids, out_s, out_i, k=k, measure=measure,
-                beta=beta, n_probe=n_probe, max_rerank=max_rerank,
-                pool_all=pool_all, bq=bq)
-        else:
-            n_probed, n_reranked, t_rerank = self._query_staged(
-                ratings, uids, out_s, out_i, k=k, measure=measure,
-                beta=beta, n_probe=n_probe, max_rerank=max_rerank,
-                scan=scan, pool_all=pool_all, bq=bq, p_np=p_np,
-                sym_use=sym_use, mode=mode)
-
-        # rerank is measured, shortlist absorbs the remainder — so the
-        # two stages partition seconds_total exactly by construction
-        t_short = max(time.perf_counter() - t_begin - t_rerank, 0.0)
+        # rerank is measured (the sum of the rerank-stage child spans),
+        # shortlist absorbs the remainder of the root span — so the two
+        # stages partition seconds_total exactly by construction
+        t_short = max(qspan.duration - t_rerank, 0.0)
         self.last_query = QueryStats(n_queries=len(uids),
                                      n_users=self.n_users,
                                      n_probed=n_probed,
@@ -1862,6 +1883,14 @@ class ClusteredIndex(_SpillClusterCore):
                                      scan_mode=scan if max_rerank else "",
                                      query_mode=qmode,
                                      scan_gate=scan_gate)
+        reg = obs.registry()
+        reg.counter("index.query.count").inc()
+        reg.counter("index.query.queries").inc(len(uids))
+        reg.counter("index.query.probed_rows").inc(n_probed)
+        reg.counter("index.query.reranked_rows").inc(n_reranked)
+        reg.histogram("index.query.seconds").observe(t_short + t_rerank)
+        reg.histogram("index.query.shortlist_seconds").observe(t_short)
+        reg.histogram("index.query.rerank_seconds").observe(t_rerank)
         return jnp.asarray(out_s), jnp.asarray(out_i)
 
     def _query_staged(self, ratings, uids, out_s, out_i, *, k, measure,
@@ -1881,9 +1910,11 @@ class ClusteredIndex(_SpillClusterCore):
 
         # pass 1 — shortlist scan (see the class docstring's stage map)
         if sym_use:
-            shorts_all = self._scan_symmetric(
-                p_np, max_rerank, bq,
-                oversample=self._sym_level(max_rerank))
+            with obs.span("query.scan", scan="symmetric",
+                          oversample=self._sym_level(max_rerank)):
+                shorts_all = self._scan_symmetric(
+                    p_np, max_rerank, bq,
+                    oversample=self._sym_level(max_rerank))
             n_probed += len(uids) * self.n_users
             n_reranked += int((shorts_all < self.n_users).sum())
             pend_pos.append(np.arange(len(uids)))
@@ -1895,41 +1926,52 @@ class ClusteredIndex(_SpillClusterCore):
                 ids_pad = np.full((bq,), self.n_users, np.int32)
                 ids_pad[:nv] = ids
                 if pool_all:
-                    short_np = (
-                        self._scan_kernel_block(ids_pad, nv, max_rerank)
-                        if scan == "kernel" else
-                        self._scan_dense_block(p_np, ids, None, max_rerank))
+                    with obs.span("query.scan", scan=scan, block=lo // bq,
+                                  candidates=self.n_users):
+                        short_np = (
+                            self._scan_kernel_block(ids_pad, nv, max_rerank)
+                            if scan == "kernel" else
+                            self._scan_dense_block(p_np, ids, None,
+                                                   max_rerank))
                     n_probed += nv * self.n_users
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
                     pend_short.append(short_np)
                     continue
                 ids_j = jnp.asarray(ids_pad)
-                probe = np.asarray(_probe_clusters(
-                    self.proxies, self.centroids, ids_j, n_probe=n_probe,
-                    use_kernel=self._use_kernel(),
-                    interpret=self.cfg.interpret))
+                with obs.span("query.probe", block=lo // bq,
+                              n_probe=n_probe):
+                    probe = np.asarray(_probe_clusters(
+                        self.proxies, self.centroids, ids_j,
+                        n_probe=n_probe, use_kernel=self._use_kernel(),
+                        interpret=self.cfg.interpret))
                 clusters = np.unique(probe[:nv])
                 if max_rerank and scan == "cluster" and \
                         int(mc[clusters].sum()) > max_rerank * spill:
                     # cluster-restricted scan (the slot count provably
                     # exceeds the budget even after spill dedup)
-                    short_np, n_slots = self._scan_cluster_block(
-                        p_np, ids, clusters, max_rerank)
+                    with obs.span("query.scan", scan="cluster",
+                                  block=lo // bq) as scsp:
+                        short_np, n_slots = self._scan_cluster_block(
+                            p_np, ids, clusters, max_rerank)
+                        scsp.set_attr("candidates", n_slots)
                     n_probed += nv * n_slots
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
                     pend_short.append(short_np)
                     continue
-                cand = np.unique(np.concatenate(
-                    [self._members[c] for c in clusters]))
+                with obs.span("query.union", block=lo // bq):
+                    cand = np.unique(np.concatenate(
+                        [self._members[c] for c in clusters]))
                 L = _bucket(len(cand))
                 cand_pad = np.full((L,), self.n_users, np.int32)
                 cand_pad[:len(cand)] = cand
                 if max_rerank and max_rerank < len(cand):
                     # dense fallback: block-union gather scan
-                    short_np = self._scan_dense_block(p_np, ids, cand,
-                                                      max_rerank)
+                    with obs.span("query.scan", scan="dense",
+                                  block=lo // bq, candidates=len(cand)):
+                        short_np = self._scan_dense_block(p_np, ids, cand,
+                                                          max_rerank)
                     n_probed += nv * len(cand)
                     n_reranked += int((short_np < self.n_users).sum())
                     pend_pos.append(np.arange(lo, lo + nv))
@@ -1951,33 +1993,36 @@ class ClusteredIndex(_SpillClusterCore):
                 # shared-matmul exact scoring below is rerank work even
                 # though it runs inside pass 1 (the stage timers must
                 # partition the wall total — see QueryStats)
-                t_mid = time.perf_counter()
-                s, i = _rerank_shared(ratings, ids_j, jnp.asarray(cand_pad),
-                                      jnp.asarray(allowed), k=k,
-                                      measure=measure, beta=beta)
-                out_s[lo:lo + bq] = np.asarray(s)[:nv]
-                out_i[lo:lo + bq] = np.asarray(i)[:nv]
-                t_rerank += time.perf_counter() - t_mid
+                with obs.span("query.rerank", kind="shared",
+                              block=lo // bq, rows=n_pairs) as rsp:
+                    s, i = _rerank_shared(ratings, ids_j,
+                                          jnp.asarray(cand_pad),
+                                          jnp.asarray(allowed), k=k,
+                                          measure=measure, beta=beta)
+                    out_s[lo:lo + bq] = np.asarray(s)[:nv]
+                    out_i[lo:lo + bq] = np.asarray(i)[:nv]
+                t_rerank += rsp.duration
 
         # pass 2 — exact rerank of the shortlists
         if pend_pos:
-            t0 = time.perf_counter()
-            pos = np.concatenate(pend_pos)
-            # ascending shortlists give the gather a monotone row walk and
-            # make stable score sorts canonical (lower id wins ties)
-            shorts = np.sort(np.concatenate(pend_short, axis=0), axis=1)
-            q_all = uids[pos]
-            norms, counts = _user_norms_counts(ratings)
-            if mode == "grouped":
-                self._rerank_grouped(ratings, norms, counts, q_all, shorts,
-                                     pos, out_s, out_i, k=k,
-                                     measure=measure, beta=beta)
-            else:
-                self._rerank_gather(ratings, norms, counts, q_all, shorts,
-                                    pos, out_s, out_i, k=k,
-                                    measure=measure, beta=beta,
-                                    max_rerank=max_rerank)
-            t_rerank += time.perf_counter() - t0
+            with obs.span("query.rerank", kind=mode) as rsp:
+                pos = np.concatenate(pend_pos)
+                # ascending shortlists give the gather a monotone row walk
+                # and make stable score sorts canonical (lower id wins ties)
+                shorts = np.sort(np.concatenate(pend_short, axis=0), axis=1)
+                rsp.set_attr("queries", len(pos))
+                q_all = uids[pos]
+                norms, counts = _user_norms_counts(ratings)
+                if mode == "grouped":
+                    self._rerank_grouped(ratings, norms, counts, q_all,
+                                         shorts, pos, out_s, out_i, k=k,
+                                         measure=measure, beta=beta)
+                else:
+                    self._rerank_gather(ratings, norms, counts, q_all,
+                                        shorts, pos, out_s, out_i, k=k,
+                                        measure=measure, beta=beta,
+                                        max_rerank=max_rerank)
+            t_rerank += rsp.duration
         return n_probed, n_reranked, t_rerank
 
     def _query_fused(self, ratings, uids, out_s, out_i, *, k, measure,
@@ -2014,14 +2059,19 @@ class ClusteredIndex(_SpillClusterCore):
             ids_pad[:nv] = ids
             ids_j = jnp.asarray(ids_pad)
             if pool_all:
-                _, shorts = _fused_scan_pool(self.proxies, ids_j, m=m,
-                                             use_pallas=use_pallas,
-                                             interpret=interpret)
+                with obs.span("query.scan", scan="pool", fused=True,
+                              block=lo // bq, candidates=n):
+                    _, shorts = _fused_scan_pool(self.proxies, ids_j, m=m,
+                                                 use_pallas=use_pallas,
+                                                 interpret=interpret)
                 n_probed += nv * n
             else:
-                probe = np.asarray(_probe_clusters(
-                    self.proxies, self.centroids, ids_j, n_probe=n_probe,
-                    use_kernel=self._use_kernel(), interpret=interpret))
+                with obs.span("query.probe", block=lo // bq,
+                              n_probe=n_probe):
+                    probe = np.asarray(_probe_clusters(
+                        self.proxies, self.centroids, ids_j,
+                        n_probe=n_probe, use_kernel=self._use_kernel(),
+                        interpret=interpret))
                 clusters = np.unique(probe[:nv])
                 # ascending candidate ids make the restricted select's
                 # block-local tie-break the canonical global-id order
@@ -2042,32 +2092,39 @@ class ClusteredIndex(_SpillClusterCore):
                                                    != ids[:, None])).sum())
                     n_probed += n_pairs
                     n_reranked += n_pairs
-                    t_mid = time.perf_counter()
-                    s, i = _rerank_shared(ratings, ids_j,
-                                          jnp.asarray(cand_pad),
-                                          jnp.asarray(allowed), k=k,
-                                          measure=measure, beta=beta)
-                    out_s[lo:lo + bq] = np.asarray(s)[:nv]
-                    out_i[lo:lo + bq] = np.asarray(i)[:nv]
-                    t_rerank += time.perf_counter() - t_mid
+                    with obs.span("query.rerank", kind="shared",
+                                  block=lo // bq, rows=n_pairs) as rsp:
+                        s, i = _rerank_shared(ratings, ids_j,
+                                              jnp.asarray(cand_pad),
+                                              jnp.asarray(allowed), k=k,
+                                              measure=measure, beta=beta)
+                        out_s[lo:lo + bq] = np.asarray(s)[:nv]
+                        out_i[lo:lo + bq] = np.asarray(i)[:nv]
+                    t_rerank += rsp.duration
                     continue
-                _, shorts = _fused_scan_restricted(
-                    self.proxies, jnp.asarray(cand_pad), ids_j, m=m,
-                    use_pallas=use_pallas, interpret=interpret)
+                with obs.span("query.scan", scan="restricted", fused=True,
+                              block=lo // bq, candidates=len(cand)):
+                    _, shorts = _fused_scan_restricted(
+                        self.proxies, jnp.asarray(cand_pad), ids_j, m=m,
+                        use_pallas=use_pallas, interpret=interpret)
                 n_probed += nv * len(cand)
             # the count sync below also fences the scan, so its cost
             # lands in the shortlist stage (rerank timing starts after)
             n_reranked += int(jnp.sum(shorts[:nv] < n))
             ku = _bucket(min(bq * shorts.shape[1], n) + 1)
-            t0 = time.perf_counter()
-            s, i = _fused_rerank_block(r_gather, ratings, norms, counts,
-                                       ids_j, shorts, ku=ku, k=k,
-                                       measure=measure, beta=beta,
-                                       use_pallas=use_pallas,
-                                       interpret=interpret)
-            out_s[lo:lo + bq] = np.asarray(s)[:nv]
-            out_i[lo:lo + bq] = np.asarray(i)[:nv]
-            t_rerank += time.perf_counter() - t0
+            # union gather + Gram rerank run inside one jitted call; the
+            # host copy of the outputs is the fence that keeps the span
+            # honest about device time
+            with obs.span("query.rerank", kind="fused", block=lo // bq,
+                          ku=ku) as rsp:
+                s, i = _fused_rerank_block(r_gather, ratings, norms, counts,
+                                           ids_j, shorts, ku=ku, k=k,
+                                           measure=measure, beta=beta,
+                                           use_pallas=use_pallas,
+                                           interpret=interpret)
+                out_s[lo:lo + bq] = np.asarray(s)[:nv]
+                out_i[lo:lo + bq] = np.asarray(i)[:nv]
+            t_rerank += rsp.duration
         return n_probed, n_reranked, t_rerank
 
     def _rerank_gather(self, ratings, norms, counts, q_all, shorts, pos,
@@ -2356,18 +2413,32 @@ class ClusteredIndex(_SpillClusterCore):
         if touched.size == 0:
             self.last_refold = RefoldStats(0, 0, 0, 0, self.n_users)
             return self.last_refold
-        patched = self._patch_row_caches(ratings, np.unique(touched),
-                                         version, means=means)
-        p_new_j = self._proxy_rows(ratings[jnp.asarray(touched)],
-                                   means[jnp.asarray(touched)])
-        changed, full_rows, reassigned = self._refold_rows(touched, p_new_j)
-        stats = RefoldStats(
-            n_touched=int(touched.size), n_changed_clusters=len(changed),
-            n_reassigned=reassigned, n_full_rows=len(full_rows),
-            n_certified=self.n_users - len(full_rows),
-            caches_patched=patched)
-        self._maybe_refit(ratings, means, stats)
+        with obs.span("index.refold", n_touched=int(touched.size)) as sp:
+            patched = self._patch_row_caches(ratings, np.unique(touched),
+                                             version, means=means)
+            p_new_j = self._proxy_rows(ratings[jnp.asarray(touched)],
+                                       means[jnp.asarray(touched)])
+            changed, full_rows, reassigned = self._refold_rows(touched,
+                                                               p_new_j)
+            stats = RefoldStats(
+                n_touched=int(touched.size),
+                n_changed_clusters=len(changed),
+                n_reassigned=reassigned, n_full_rows=len(full_rows),
+                n_certified=self.n_users - len(full_rows),
+                caches_patched=patched)
+            self._maybe_refit(ratings, means, stats)
         self.last_refold = stats
+        # index-health gauges: the drift/mass ledgers become scrapeable
+        # (the serving autotuner's staleness inputs — ROADMAP item 3)
+        reg = obs.registry()
+        reg.counter("index.refold.count").inc()
+        reg.histogram("index.refold.seconds").observe(sp.duration)
+        reg.gauge("index.refold.reassign_frac").set(stats.reassigned_frac)
+        reg.gauge("index.refold.caches_patched").set(stats.caches_patched)
+        if stats.refit:
+            reg.counter("index.refit.count").inc()
+        if version is not None:
+            reg.gauge("index.ratings_version").set(version)
         return stats
 
     # -- diagnostics -------------------------------------------------------

@@ -74,6 +74,7 @@ try:                       # optional host fast path (see shortlist_mode)
 except ImportError:        # pragma: no cover - container ships scipy
     _scipy_sparse = None
 
+from repro import obs
 from repro.core import predict as pred_mod
 from repro.core import similarity as sim
 from repro.index.clustered import (_SpillClusterCore, _bucket, _project,
@@ -373,25 +374,33 @@ class ItemClusteredIndex(_SpillClusterCore):
             means = sim.user_stats(ratings)[2]
         self._resolve_sizes()
 
-        z = _item_feats(ratings, means, features=self.cfg.features)
-        p = min(self.cfg.project_dim, self.n_users)
-        if self.cfg.project_dim and p < self.n_users:
-            self.basis = jnp.asarray(
-                _svd_basis(np.asarray(z), p, self.cfg.seed))
-        else:
-            self.basis = None
-        self.proxies = (_project(z, self.basis)
-                        if self.basis is not None else z)
-        self._fit_clusters()
+        with obs.span("item_index.fit", device_sync=True,
+                      n_users=self.n_users, n_items=self.n_rows,
+                      n_clusters=self.cfg.n_clusters) as sp:
+            z = _item_feats(ratings, means, features=self.cfg.features)
+            p = min(self.cfg.project_dim, self.n_users)
+            if self.cfg.project_dim and p < self.n_users:
+                with obs.span("fit.svd_basis", dim=p):
+                    self.basis = jnp.asarray(
+                        _svd_basis(np.asarray(z), p, self.cfg.seed))
+            else:
+                self.basis = None
+            self.proxies = (_project(z, self.basis)
+                            if self.basis is not None else z)
+            self._fit_clusters()
 
-        w, has_pos = _affinity_weights(ratings, means)
-        self.profiles = _fold_profiles(w, self.proxies)
-        self._has_pos = has_pos
-        self._support_cache = None
-        self._support_dense_cache = None
-        self._touched_since_profile = 0
-        if self._shortlist_mode() != "kernel":
-            self._support_table(ratings, means)   # pre-warm scorer operand
+            w, has_pos = _affinity_weights(ratings, means)
+            self.profiles = _fold_profiles(w, self.proxies)
+            self._has_pos = has_pos
+            self._support_cache = None
+            self._support_dense_cache = None
+            self._touched_since_profile = 0
+            if self._shortlist_mode() != "kernel":
+                # pre-warm scorer operand
+                self._support_table(ratings, means)
+            sp.track(self.profiles)
+        obs.registry().histogram("item_index.fit.seconds").observe(
+            sp.duration)
         return self
 
     # -- recommend ---------------------------------------------------------
@@ -427,9 +436,35 @@ class ItemClusteredIndex(_SpillClusterCore):
             s_mode = "support"
         if shortlist and s_mode in ("support", "kernel") \
                 and max(n, shortlist) < self.n_items:
-            return self._recommend_support(ratings, means, nb_scores,
-                                           nb_idx, uids, n=n,
-                                           scorer=s_mode)
+            with obs.span("item_index.recommend", n_queries=len(uids),
+                          n=n, scorer=s_mode) as sp:
+                out = self._recommend_support(ratings, means, nb_scores,
+                                              nb_idx, uids, n=n,
+                                              scorer=s_mode)
+            self._obs_recommend(sp)
+            return out
+        with obs.span("item_index.recommend", n_queries=len(uids), n=n,
+                      scorer="proxy") as sp:
+            out = self._recommend_proxy(ratings, means, nb_scores, nb_idx,
+                                        uids, n=n, n_probe=n_probe)
+        self._obs_recommend(sp)
+        return out
+
+    def _obs_recommend(self, sp) -> None:
+        """Publish one recommend call to the registry (root span closed)."""
+        st = self.last_recommend
+        reg = obs.registry()
+        reg.counter("item_index.recommend.count").inc()
+        reg.counter("item_index.recommend.queries").inc(st.n_queries)
+        reg.counter("item_index.recommend.reranked_rows").inc(st.n_reranked)
+        reg.histogram("item_index.recommend.seconds").observe(sp.duration)
+
+    def _recommend_proxy(self, ratings, means, nb_scores, nb_idx,
+                         uids: np.ndarray, *, n: int, n_probe: int):
+        """The dense proxy-scorer path: probe item clusters near each
+        query block's taste profile, proxy-shortlist, exact rerank (the
+        non-support fallback of :meth:`recommend`)."""
+        shortlist = self.cfg.shortlist
         gather_src = self._gather_source(ratings)
         bq = min(self.cfg.query_block, _bucket(len(uids)))
         out_s = np.empty((len(uids), n), np.float32)
@@ -468,51 +503,57 @@ class ItemClusteredIndex(_SpillClusterCore):
 
             m_short = max(n, shortlist) if shortlist else 0
             if m_short and m_short < len(cand):
-                sp_dev = (_shortlist_scores_all(prof, self.proxies,
-                                                seen_rows)
-                          if pool_all else
-                          _shortlist_scores(prof, self.proxies,
-                                            jnp.asarray(cand_pad),
-                                            seen_rows))
-                if self._use_kernel() or self.cfg.interpret:
-                    # device top-M through the shared blockwise-select
-                    # kernel — proxy scores never round-trip to the host
-                    # (the scores already carry the seen-item knockout,
-                    # so no q_ids self-knockout is needed)
-                    from repro.kernels.select import select_topm
-                    v, sel = select_topm(
-                        sp_dev, jnp.full((sp_dev.shape[0],), -1,
-                                         jnp.int32),
-                        m=min(m_short, sp_dev.shape[1]),
-                        interpret=self.cfg.interpret)
-                    selv = np.asarray(v)[:nv]
-                    sel = np.asarray(sel)[:nv]
-                else:
-                    # np.array: jax hands back a read-only view and the
-                    # torch topk fast path wants a writable buffer
-                    sp = np.array(np.asarray(sp_dev)[:nv])
-                    selv, sel = _topm_rows(sp, m_short,
-                                           col_ids=cand_pad)
-                # sel uses the sentinel id len(cand_pad) for -inf slots;
-                # clamp before the gather, then mask — never index a
-                # member table through a dead slot
-                sel = np.minimum(sel, len(cand_pad) - 1)
-                short = np.where(np.isneginf(selv), self.n_items,
-                                 cand_pad[sel]).astype(np.int32)
-                short = np.sort(short, axis=1)   # ascending → monotone
-                short_pad = np.full((bq, m_short), self.n_items, np.int32)
-                short_pad[:nv] = short
+                with obs.span("recommend.shortlist", block=lo // bq,
+                              candidates=len(cand)):
+                    sp_dev = (_shortlist_scores_all(prof, self.proxies,
+                                                    seen_rows)
+                              if pool_all else
+                              _shortlist_scores(prof, self.proxies,
+                                                jnp.asarray(cand_pad),
+                                                seen_rows))
+                    if self._use_kernel() or self.cfg.interpret:
+                        # device top-M through the shared blockwise-select
+                        # kernel — proxy scores never round-trip to the
+                        # host (the scores already carry the seen-item
+                        # knockout, so no q_ids self-knockout is needed)
+                        from repro.kernels.select import select_topm
+                        v, sel = select_topm(
+                            sp_dev, jnp.full((sp_dev.shape[0],), -1,
+                                             jnp.int32),
+                            m=min(m_short, sp_dev.shape[1]),
+                            interpret=self.cfg.interpret)
+                        selv = np.asarray(v)[:nv]
+                        sel = np.asarray(sel)[:nv]
+                    else:
+                        # np.array: jax hands back a read-only view and
+                        # the torch topk fast path wants a writable buffer
+                        sp = np.array(np.asarray(sp_dev)[:nv])
+                        selv, sel = _topm_rows(sp, m_short,
+                                               col_ids=cand_pad)
+                    # sel uses the sentinel id len(cand_pad) for -inf
+                    # slots; clamp before the gather, then mask — never
+                    # index a member table through a dead slot
+                    sel = np.minimum(sel, len(cand_pad) - 1)
+                    short = np.where(np.isneginf(selv), self.n_items,
+                                     cand_pad[sel]).astype(np.int32)
+                    short = np.sort(short, axis=1)  # ascending → monotone
+                    short_pad = np.full((bq, m_short), self.n_items,
+                                        np.int32)
+                    short_pad[:nv] = short
             else:
                 short_pad = np.broadcast_to(cand_pad[None, :],
                                             (bq, len(cand_pad)))
-            n_reranked += int((short_pad[:nv] < self.n_items).sum())
+            blk_rows = int((short_pad[:nv] < self.n_items).sum())
+            n_reranked += blk_rows
 
-            s, i = _rerank_items(
-                ratings, gather_src, nbs, nbi, means, q_means, ids_j,
-                jnp.asarray(short_pad), n=n,
-                item_block=self.cfg.item_block)
-            out_s[lo:lo + nv] = np.asarray(s)[:nv]
-            out_i[lo:lo + nv] = np.asarray(i)[:nv]
+            with obs.span("recommend.rerank", block=lo // bq,
+                          rows=blk_rows):
+                s, i = _rerank_items(
+                    ratings, gather_src, nbs, nbi, means, q_means, ids_j,
+                    jnp.asarray(short_pad), n=n,
+                    item_block=self.cfg.item_block)
+                out_s[lo:lo + nv] = np.asarray(s)[:nv]
+                out_i[lo:lo + nv] = np.asarray(i)[:nv]
 
         self.last_recommend = RecommendStats(
             n_queries=len(uids), n_items=self.n_items,
@@ -534,6 +575,12 @@ class ItemClusteredIndex(_SpillClusterCore):
         path's tie-break produces.  Runs on one thread; the caller fans
         chunks over two (numpy ufuncs and the selection release the GIL).
         """
+        with obs.span("recommend.score", rows=int(w.shape[0])):
+            return self._score_select_rows_body(stacked, w, safe_idx,
+                                                q_means, seen_rows, m_short)
+
+    def _score_select_rows_body(self, stacked, w, safe_idx, q_means,
+                                seen_rows, m_short: int) -> np.ndarray:
         n_items = self.n_items
         if _scipy_sparse is not None:
             rows = np.repeat(np.arange(w.shape[0]), w.shape[1])
@@ -560,6 +607,11 @@ class ItemClusteredIndex(_SpillClusterCore):
         """Canonical top-``m_short`` selection over scored rows (seen items
         already at -inf) with the tie-boundary repair of
         ``_score_select_rows``'s docstring."""
+        with obs.span("recommend.select", rows=int(num.shape[0])):
+            return self._select_shortlist_body(num, m_short)
+
+    def _select_shortlist_body(self, num: np.ndarray,
+                               m_short: int) -> np.ndarray:
         n_items = self.n_items
         sel = np.argpartition(num, n_items - m_short,
                               axis=1)[:, n_items - m_short:]
@@ -664,13 +716,15 @@ class ItemClusteredIndex(_SpillClusterCore):
                     safe_j = jnp.clip(ids_j, 0, self.n_users - 1)
                     sh_pad = np.full((bq, m_short), n_items, np.int32)
                     sh_pad[:nv] = shorts[b0:b0 + nv]
-                    s_j, i_j = _rerank_items(
-                        ratings, gather_src, nb_scores[safe_j],
-                        nb_idx[safe_j], means, means[safe_j], ids_j,
-                        jnp.asarray(sh_pad), n=n,
-                        item_block=self.cfg.item_block)
-                    out_s[lo + b0:lo + b0 + nv] = np.asarray(s_j)[:nv]
-                    out_i[lo + b0:lo + b0 + nv] = np.asarray(i_j)[:nv]
+                    with obs.span("recommend.rerank", chunk=ci,
+                                  rows=int((sh_pad[:nv] < n_items).sum())):
+                        s_j, i_j = _rerank_items(
+                            ratings, gather_src, nb_scores[safe_j],
+                            nb_idx[safe_j], means, means[safe_j], ids_j,
+                            jnp.asarray(sh_pad), n=n,
+                            item_block=self.cfg.item_block)
+                        out_s[lo + b0:lo + b0 + nv] = np.asarray(s_j)[:nv]
+                        out_i[lo + b0:lo + b0 + nv] = np.asarray(i_j)[:nv]
 
         self.last_recommend = RecommendStats(
             n_queries=len(uids), n_items=n_items,
@@ -768,51 +822,68 @@ class ItemClusteredIndex(_SpillClusterCore):
             self.last_refold = RefoldStats(0, 0, 0, 0, self.n_items)
             return self.last_refold
 
-        ti_j = jnp.asarray(t_items)
-        p_old = np.asarray(self.proxies[ti_j])
-        p_new_j = self._proxy_rows(ratings[:, ti_j], means)
-        changed, full_rows, reassigned = self._refold_rows(t_items, p_new_j)
+        with obs.span("item_index.refold",
+                      n_touched=int(t_items.size)) as sp:
+            ti_j = jnp.asarray(t_items)
+            p_old = np.asarray(self.proxies[ti_j])
+            p_new_j = self._proxy_rows(ratings[:, ti_j], means)
+            changed, full_rows, reassigned = self._refold_rows(t_items,
+                                                               p_new_j)
 
-        # profile maintenance against the moved proxies
-        d_p = jnp.asarray(np.asarray(p_new_j) - p_old)        # (T, p)
-        cols = ratings[:, ti_j]                               # (U, T)
-        mask = cols > 0
-        pos = jnp.where(mask, jnp.maximum(cols - means[:, None], 0.0), 0.0)
-        w_cols = jnp.where(self._has_pos[:, None], pos,
-                           mask.astype(jnp.float32))
-        if t_users.size:
-            w_cols = w_cols.at[jnp.asarray(t_users)].set(0.0)
-        self.profiles = self.profiles + w_cols @ d_p
-        if t_users.size:
-            tu_j = jnp.asarray(t_users)
-            w_t, hp_t = _affinity_weights(ratings[tu_j], means[tu_j])
-            self.profiles = self.profiles.at[tu_j].set(
-                _fold_profiles(w_t, self.proxies))
-            self._has_pos = self._has_pos.at[tu_j].set(hp_t)
+            # profile maintenance against the moved proxies
+            d_p = jnp.asarray(np.asarray(p_new_j) - p_old)    # (T, p)
+            cols = ratings[:, ti_j]                           # (U, T)
+            mask = cols > 0
+            pos = jnp.where(mask,
+                            jnp.maximum(cols - means[:, None], 0.0), 0.0)
+            w_cols = jnp.where(self._has_pos[:, None], pos,
+                               mask.astype(jnp.float32))
+            if t_users.size:
+                w_cols = w_cols.at[jnp.asarray(t_users)].set(0.0)
+            self.profiles = self.profiles + w_cols @ d_p
+            if t_users.size:
+                tu_j = jnp.asarray(t_users)
+                w_t, hp_t = _affinity_weights(ratings[tu_j], means[tu_j])
+                self.profiles = self.profiles.at[tu_j].set(
+                    _fold_profiles(w_t, self.proxies))
+                self._has_pos = self._has_pos.at[tu_j].set(hp_t)
 
-        stats = RefoldStats(
-            n_touched=int(t_items.size), n_changed_clusters=len(changed),
-            n_reassigned=reassigned, n_full_rows=len(full_rows),
-            n_certified=self.n_items - len(full_rows),
-            caches_patched=n_patched)
+            stats = RefoldStats(
+                n_touched=int(t_items.size),
+                n_changed_clusters=len(changed),
+                n_reassigned=reassigned, n_full_rows=len(full_rows),
+                n_certified=self.n_items - len(full_rows),
+                caches_patched=n_patched)
 
-        # periodic profile re-fold (ROADMAP "profile drift"): once the
-        # cumulative touched-column fraction crosses the threshold, zero
-        # the accumulated Σ w·Δproxy float error with one cold fold —
-        # piggybacking the same drift bookkeeping as the refit guard
-        self._touched_since_profile += int(t_items.size)
-        thr = getattr(self.cfg, "profile_refold_frac", 0.0)
-        if thr and self._touched_since_profile >= thr * self.n_items:
-            w_all, hp_all = _affinity_weights(ratings, means)
-            self.profiles = _fold_profiles(w_all, self.proxies)
-            self._has_pos = hp_all
-            self._touched_since_profile = 0
-            stats.profile_refold = True
+            # periodic profile re-fold (ROADMAP "profile drift"): once the
+            # cumulative touched-column fraction crosses the threshold,
+            # zero the accumulated Σ w·Δproxy float error with one cold
+            # fold — piggybacking the same drift bookkeeping as the refit
+            # guard
+            self._touched_since_profile += int(t_items.size)
+            thr = getattr(self.cfg, "profile_refold_frac", 0.0)
+            if thr and self._touched_since_profile >= thr * self.n_items:
+                w_all, hp_all = _affinity_weights(ratings, means)
+                self.profiles = _fold_profiles(w_all, self.proxies)
+                self._has_pos = hp_all
+                self._touched_since_profile = 0
+                stats.profile_refold = True
 
-        self._maybe_refit(ratings, means, stats)
-        if stats.refit:
-            self._touched_since_profile = 0    # fit re-folded profiles
+            self._maybe_refit(ratings, means, stats)
+            if stats.refit:
+                self._touched_since_profile = 0  # fit re-folded profiles
         self.last_refold = stats
+        reg = obs.registry()
+        reg.counter("item_index.refold.count").inc()
+        reg.histogram("item_index.refold.seconds").observe(sp.duration)
+        reg.gauge("item_index.refold.reassign_frac").set(
+            stats.reassigned_frac)
+        reg.gauge("item_index.refold.caches_patched").set(
+            stats.caches_patched)
+        if stats.refit:
+            reg.counter("item_index.refit.count").inc()
+        if version is not None:
+            reg.gauge("item_index.ratings_version").set(version)
         return stats
 
     # -- diagnostics -------------------------------------------------------

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.kernels.cluster import centroid_distances
 
 
@@ -174,24 +174,31 @@ def kmeans(z: jnp.ndarray, n_clusters: int, *, seed: int = 0, iters: int = 8,
             _sweep, block_size=block_size, n_clusters=n_clusters,
             use_kernel=use_kernel, interpret=interpret)
     n_reseeds = 0
-    for _ in range(iters):
-        sums, counts, assign, best_d = sweep(z_p, valid, centroids)
-        counts_np = np.asarray(counts)
-        new_c = np.asarray(sums) / np.maximum(counts_np, 1)[:, None]
-        empty = np.nonzero(counts_np == 0)[0]
-        if len(empty):
-            # farthest-point re-seed: rows worst-served by their centroid,
-            # lowest row id on ties — deterministic
-            bd = np.asarray(best_d)[:n_rows]
-            donors = np.lexsort((np.arange(n_rows), -bd))[:len(empty)]
-            new_c[empty] = np.asarray(z)[donors]
-            n_reseeds += len(empty)
-        centroids = jnp.asarray(new_c, jnp.float32)
+    with obs.span("kmeans.fit", n_rows=n_rows, n_clusters=n_clusters,
+                  iters=iters, n_shards=n_shards) as sp:
+        for _ in range(iters):
+            sums, counts, assign, best_d = sweep(z_p, valid, centroids)
+            counts_np = np.asarray(counts)
+            new_c = np.asarray(sums) / np.maximum(counts_np, 1)[:, None]
+            empty = np.nonzero(counts_np == 0)[0]
+            if len(empty):
+                # farthest-point re-seed: rows worst-served by their
+                # centroid, lowest row id on ties — deterministic
+                bd = np.asarray(best_d)[:n_rows]
+                donors = np.lexsort((np.arange(n_rows), -bd))[:len(empty)]
+                new_c[empty] = np.asarray(z)[donors]
+                n_reseeds += len(empty)
+            centroids = jnp.asarray(new_c, jnp.float32)
 
-    # final canonical assignment against the converged centroids
-    _, _, assign, best_d = sweep(z_p, valid, centroids)
-    assign = np.array(assign[:n_rows])        # writable host copies: the
-    best_d = np.array(best_d[:n_rows])        # index repairs them in place
+        # final canonical assignment against the converged centroids
+        _, _, assign, best_d = sweep(z_p, valid, centroids)
+        assign = np.array(assign[:n_rows])     # writable host copies: the
+        best_d = np.array(best_d[:n_rows])     # index repairs them in place
+        sp.set_attr("n_reseeds", n_reseeds)
     stats = KMeansStats(iters=iters, n_reseeds=n_reseeds,
                         inertia=float(best_d.sum()))
+    reg = obs.registry()
+    reg.histogram("kmeans.fit.seconds").observe(sp.duration)
+    reg.gauge("kmeans.inertia").set(stats.inertia)
+    reg.gauge("kmeans.reseeds").set(n_reseeds)
     return centroids, assign, best_d, stats

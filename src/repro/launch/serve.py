@@ -3,19 +3,37 @@
     PYTHONPATH=src python -m repro.launch.serve --requests 128
     PYTHONPATH=src python -m repro.launch.serve --engine facade \\
         --recommend-mode approx          # two-stage item-index serving
+
+Telemetry: the server publishes into the process-wide ``repro.obs``
+registry here (so index/engine metrics and serving metrics land in one
+dump); ``--stats-interval`` logs a periodic ``stats()`` line while the
+run is in flight and ``--metrics-dump PATH`` writes the final registry
+snapshot as the flat JSON metrics artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import CFConfig, UserCF
 from repro.data import load_ml1m_synthetic
 from repro.serving.engine import BatchingServer
+
+
+def _stats_line(server: BatchingServer) -> str:
+    s = server.stats()
+    return (f"requests={s['n_requests']} batches={s['n_batches']} "
+            f"p50={s['latency_p50_ms']:.1f}ms p99={s['latency_p99_ms']:.1f}ms "
+            f"queue={s['queue_wait_mean_ms']:.1f}ms "
+            f"compute={s['compute_mean_ms']:.1f}ms "
+            f"fill={s['mean_batch_fill']:.2f} "
+            f"depth={s['mean_queue_depth']:.1f}")
 
 
 def main():
@@ -33,6 +51,12 @@ def main():
                     default="exact",
                     help="facade engine only: approx serves through the "
                          "two-stage item index")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="seconds between periodic stats() log lines "
+                         "(0 disables)")
+    ap.add_argument("--metrics-dump", default=None,
+                    help="write the final metrics-registry snapshot "
+                         "(fit + serving) to this JSON path")
     args = ap.parse_args()
 
     train, _, _ = load_ml1m_synthetic(n_users=args.users,
@@ -43,25 +67,34 @@ def main():
         engine = CFEngine(tr, measure=args.measure, k=40, block_size=256,
                           recommend_mode=args.recommend_mode).fit()
         server = BatchingServer(engine, max_batch=args.max_batch,
-                                topn=args.topn)
+                                topn=args.topn, registry=obs.registry())
     else:
         cf = UserCF(CFConfig(measure=args.measure, top_k=40,
                              block_size=256))
         cf.fit(tr)
         server = BatchingServer(cf, tr, max_batch=args.max_batch,
-                                topn=args.topn)
+                                topn=args.topn, registry=obs.registry())
     server.start()
+
+    stop_log = threading.Event()
+    if args.stats_interval > 0:
+        def logger():
+            while not stop_log.wait(args.stats_interval):
+                print(f"[stats] {_stats_line(server)}", flush=True)
+        threading.Thread(target=logger, daemon=True).start()
+
     t0 = time.perf_counter()
     futs = [server.submit(int(u)) for u in
             np.random.default_rng(0).integers(0, args.users, args.requests)]
     res = [f.result(timeout=120) for f in futs]
     dt = time.perf_counter() - t0
+    stop_log.set()
     server.stop()
-    lat = sorted(r.latency_ms for r in res)
     print(f"{len(res)} requests, {len(res) / dt:.0f} req/s, "
-          f"p50 {lat[len(lat) // 2]:.1f} ms, "
-          f"p99 {lat[int(0.99 * len(lat))]:.1f} ms, "
-          f"{server.n_batches} batches")
+          f"{_stats_line(server)}")
+    if args.metrics_dump:
+        obs.export_metrics(args.metrics_dump)
+        print(f"wrote {args.metrics_dump}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,17 @@ batch predictor's memory stays O(batch·k·item_block) however wide the item
 catalog grows.  An engine built with ``recommend_mode="approx"`` is served
 through its two-stage item-index path instead — candidate generation +
 exact rerank, the end-to-end sublinear configuration.
+
+Telemetry goes through a :class:`repro.obs.MetricsRegistry` (per-server by
+default, shareable via ``registry=``): per-request latency splits into
+queue wait (enqueue → batch launch) and compute wait (launch → futures
+resolved), each a fixed-bucket histogram, so ``stats()`` reads one
+lock-consistent snapshot instead of sorting a deque the batcher thread is
+mutating.  Percentiles are histogram bucket *upper bounds* (exact bounds,
+~26 % worst-case relative error at 10 buckets/decade) — never below the
+true quantile.  Each served batch also records a ``serve.batch`` span with
+a ``serve.predict`` child, so batches appear on the batcher thread's track
+in the exported chrome trace.
 """
 
 from __future__ import annotations
@@ -26,7 +37,6 @@ import functools
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
 from typing import Optional
 
@@ -34,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.predict import predict_from_neighbors_blocked, topn_unseen
 
 _ITEM_BLOCK = 512      # predict tile width: batch·k·tile intermediates
@@ -58,7 +69,8 @@ def _predict_users(users, ratings, scores, idx, means, *, topn):
 
 class BatchingServer:
     def __init__(self, cf_model, ratings=None, *, max_batch: int = 16,
-                 max_wait_ms: float = 20.0, topn: int = 10):
+                 max_wait_ms: float = 20.0, topn: int = 10,
+                 registry: Optional[obs.MetricsRegistry] = None):
         self._approx_engine = None
         if ratings is None:
             # CFEngine facade: snapshot() hands a consistent model view even
@@ -86,12 +98,20 @@ class BatchingServer:
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        # per-batch / per-request telemetry: bounded deques (append-only,
-        # read whole under the GIL, so stats() needs no lock); a long-lived
-        # server keeps a sliding window rather than unbounded history
-        self._lat_ms: "deque" = deque(maxlen=100_000)
-        self._batch_fill: "deque" = deque(maxlen=20_000)
-        self._queue_depth: "deque" = deque(maxlen=20_000)
+        # per-batch / per-request telemetry: histograms in a registry
+        # (per-server by default so tests stay isolated; pass the process
+        # registry to fold serving metrics into one dump).  The batcher
+        # thread observes, stats() snapshots — both under the registry
+        # lock, so there is no torn read of a mid-mutation deque.
+        self.registry = registry if registry is not None \
+            else obs.MetricsRegistry()
+        self._h_latency = self.registry.histogram("serve.latency_seconds")
+        self._h_queue = self.registry.histogram("serve.queue_seconds")
+        self._h_compute = self.registry.histogram("serve.compute_seconds")
+        self._h_fill = self.registry.histogram("serve.batch_fill")
+        self._h_depth = self.registry.histogram("serve.queue_depth")
+        self._c_requests = self.registry.counter("serve.requests")
+        self._c_batches = self.registry.counter("serve.batches")
         # warm the executable with the padded batch shape
         self._run_padded(jnp.zeros((self.max_batch,), jnp.int32))
 
@@ -141,36 +161,55 @@ class BatchingServer:
 
     def _run_batch(self, batch):
         self.n_batches += 1
+        self._c_batches.inc()
+        self._c_requests.inc(len(batch))
         # depth at launch: what this batch drained plus what is still queued
-        self._queue_depth.append(len(batch) + self._q.qsize())
-        self._batch_fill.append(len(batch) / self.max_batch)
-        users = np.zeros((self.max_batch,), np.int32)
-        for j, (u, _, _) in enumerate(batch):
-            users[j] = u
-        scores, items = self._run_padded(jnp.asarray(users))
-        scores = np.asarray(scores)
-        items = np.asarray(items)
-        now = time.perf_counter()
-        for j, (u, t0, fut) in enumerate(batch):
-            lat = (now - t0) * 1e3
-            self._lat_ms.append(lat)
-            fut.set_result(Recommendation(
-                user=u, items=items[j], scores=scores[j], latency_ms=lat))
+        self._h_depth.observe(len(batch) + self._q.qsize())
+        self._h_fill.observe(len(batch) / self.max_batch)
+        with obs.span("serve.batch", batch_size=len(batch)):
+            t_launch = time.perf_counter()
+            users = np.zeros((self.max_batch,), np.int32)
+            for j, (u, _, _) in enumerate(batch):
+                users[j] = u
+            with obs.span("serve.predict", batch_size=len(batch)):
+                scores, items = self._run_padded(jnp.asarray(users))
+                scores = np.asarray(scores)   # host copy = device fence
+                items = np.asarray(items)
+            now = time.perf_counter()
+            for j, (u, t0, fut) in enumerate(batch):
+                # per-request latency split: queue wait (enqueue → batch
+                # launch) + compute wait (launch → futures resolved)
+                self._h_queue.observe(max(t_launch - t0, 0.0))
+                self._h_compute.observe(now - t_launch)
+                lat = (now - t0) * 1e3
+                self._h_latency.observe(lat / 1e3)
+                fut.set_result(Recommendation(
+                    user=u, items=items[j], scores=scores[j],
+                    latency_ms=lat))
 
     # -- telemetry ---------------------------------------------------------
     def stats(self) -> dict:
-        """Serving-tier health: latency percentiles, batching efficiency,
-        and queue pressure over the telemetry window (the last ~100k
-        requests / ~20k batches); ``n_batches`` counts the full lifetime."""
-        lat = sorted(self._lat_ms)
-        n = len(lat)
+        """Serving-tier health from one lock-consistent registry snapshot:
+        latency percentiles (histogram bucket upper bounds — see the
+        module docstring), the queue-wait vs compute-wait split, batching
+        efficiency, and queue pressure.  Counts cover the server's full
+        lifetime."""
+        snap = self.registry.snapshot()
+        hists = snap["histograms"]
+
+        def mean(name):
+            h = hists.get(name)
+            return h["sum"] / h["count"] if h and h["count"] else 0.0
+
+        lat = hists.get("serve.latency_seconds")
+        n = lat["count"] if lat else 0
         return {
             "n_requests": n,
             "n_batches": self.n_batches,
-            "latency_p50_ms": lat[n // 2] if n else 0.0,
-            "latency_p99_ms": lat[min(int(n * 0.99), n - 1)] if n else 0.0,
-            "mean_batch_fill": (sum(self._batch_fill)
-                                / max(len(self._batch_fill), 1)),
-            "mean_queue_depth": (sum(self._queue_depth)
-                                 / max(len(self._queue_depth), 1)),
+            "latency_p50_ms": (lat["p50"] * 1e3 if n else 0.0),
+            "latency_p99_ms": (lat["p99"] * 1e3 if n else 0.0),
+            "queue_wait_mean_ms": mean("serve.queue_seconds") * 1e3,
+            "compute_mean_ms": mean("serve.compute_seconds") * 1e3,
+            "mean_batch_fill": mean("serve.batch_fill"),
+            "mean_queue_depth": mean("serve.queue_depth"),
         }

@@ -34,8 +34,49 @@ def test_stats_accumulate_over_requests(rng):
     assert 0.0 < s["latency_p50_ms"] <= s["latency_p99_ms"]
     assert 0.0 < s["mean_batch_fill"] <= 1.0
     assert s["mean_queue_depth"] >= 1.0
-    # per-request latencies surfaced on the results agree with the stats
-    assert max(r.latency_ms for r in results) >= s["latency_p50_ms"]
+    # per-request latencies surfaced on the results agree with the stats:
+    # histogram percentiles are bucket *upper bounds*, at most one bucket
+    # width (10^0.1 ≈ 1.26×) above the truest sample
+    assert max(r.latency_ms for r in results) * 10 ** 0.1 \
+        >= s["latency_p50_ms"]
+    assert s["queue_wait_mean_ms"] >= 0.0
+    assert s["compute_mean_ms"] > 0.0
+
+
+def test_stats_consistent_under_concurrent_submits(rng):
+    """stats() reads one registry snapshot while the batcher is mutating
+    histograms — hammer it from a second thread and check every snapshot
+    is internally consistent (no torn reads, percentiles ordered)."""
+    import threading
+
+    server = BatchingServer(_engine(rng), max_batch=4, max_wait_ms=2.0,
+                            topn=3)
+    server.start()
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop.is_set():
+            s = server.stats()
+            if not (0.0 <= s["latency_p50_ms"] <= s["latency_p99_ms"]):
+                bad.append(s)
+            if s["n_requests"] < 0 or s["mean_batch_fill"] > 1.0:
+                bad.append(s)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    futures = [server.submit(int(u)) for u in rng.integers(0, 64, 64)]
+    for f in futures:
+        f.result(timeout=30)
+    stop.set()
+    th.join(timeout=10)
+    server.stop()
+    assert not bad
+    s = server.stats()
+    assert s["n_requests"] == 64
+    # a second server keeps its own registry: no cross-talk
+    other = BatchingServer(_engine(rng), max_batch=4, topn=3)
+    assert other.stats()["n_requests"] == 0
 
 
 def test_stats_with_approx_engine(rng):
