@@ -1,0 +1,31 @@
+"""repro.analysis — reprolint: mechanical enforcement of the repo's
+hard-won concurrency and numerical-policy invariants.
+
+Two halves:
+
+* **Static** (``python -m repro.analysis src/``): five dependency-free
+  AST checks — ``silent-fallback``, ``canonical-selection``,
+  ``kernel-oracle``, ``host-transfer``, ``lock-discipline`` — each the
+  codified form of a bug a past PR shipped and a later PR dug out by
+  hand (see ``repro.analysis.checks``).  Findings gate CI; silencing one
+  requires a written reason, inline
+  (``# reprolint: disable=<check> -- <why>``) or in the committed
+  ``reprolint_baseline.json``.
+* **Runtime** (``repro.analysis.races``): an Eraser-style lockset tracer
+  that wraps the serving-tier objects during the concurrency stress
+  tests and reports unguarded read/write and write/write conflicts.
+
+README § "Static analysis & invariants" has the operator's guide.
+"""
+
+from repro.analysis.checks import run_local_checks
+from repro.analysis.findings import (CHECKS, Finding, load_baseline,
+                                     parse_suppressions, report_json)
+from repro.analysis.linter import analyze_paths, main
+from repro.analysis.races import RaceFinding, RaceTracer
+
+__all__ = [
+    "CHECKS", "Finding", "RaceFinding", "RaceTracer", "analyze_paths",
+    "load_baseline", "main", "parse_suppressions", "report_json",
+    "run_local_checks",
+]

@@ -1,0 +1,495 @@
+"""The five reprolint AST checks.
+
+Each check is grounded in a bug this repo actually shipped and later dug
+out by hand (see ISSUE/CHANGES history):
+
+* ``silent-fallback`` — PR 6 existed because fallbacks inside the query
+  path degraded silently.  A ``try/except`` that catches ``Exception`` (or
+  everything) must record what happened — a ``repro.obs``
+  counter/span-attr/log call, or keeping the bound exception for a later
+  re-raise — or re-raise as its final act.
+* ``canonical-selection`` — PR 5 found ``torch.topk``'s arbitrary tie
+  sets silently de-canonicalising shortlists.  Raw ``argpartition`` /
+  ``topk`` / ``lax.top_k`` / selection-``argsort`` calls are banned
+  outside the blessed tie-repaired policy (``_topm_rows`` and friends,
+  ``kernels/select.py``, and the oracles in ``kernels/ref.py``).
+* ``kernel-oracle`` — every Pallas kernel entry point must pair with an
+  oracle in ``kernels/ref.py`` and a test that exercises both names, the
+  contract every kernel PR in this repo has honoured by convention.
+* ``host-transfer`` — PR 6's other half: ``.item()`` / ``np.asarray`` /
+  ``float()`` / ``device_get`` on traced values inside a jitted function
+  forces a device round-trip per call (or a tracer error at best).
+* ``lock-discipline`` — PR 7 fixed a ``BatchingServer.stats()`` race that
+  shipped in PR 2.  Within a class, an attribute written under a lock
+  somewhere must never be written off-lock elsewhere; and an attribute
+  written from thread-reachable code (``Thread(target=self.m)`` /
+  ``pool.submit(self.m)`` closures included) without a lock must not be
+  touched from caller-facing methods.
+
+All checks are purely lexical/syntactic (no imports of the scanned code),
+so the linter runs anywhere the repo checks out.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# -- shared helpers ---------------------------------------------------------
+
+
+def dotted(node) -> Optional[str]:
+    """Best-effort dotted name for a Name/Attribute chain: ``jax.lax.top_k``.
+    Chains rooted in a non-Name expression keep the attribute tail only
+    (``x[:1].topk`` → ``topk``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    elif not parts:
+        return None
+    return ".".join(reversed(parts))
+
+
+def _qualnames(tree: ast.AST) -> Dict[ast.AST, str]:
+    """Map every node to its enclosing scope qualname (``Cls.method``)."""
+    out: Dict[ast.AST, str] = {}
+
+    def visit(node, scope):
+        name = scope
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            name = f"{scope}.{node.name}" if scope else node.name
+        for child in ast.iter_child_nodes(node):
+            out[child] = name
+            visit(child, name)
+
+    out[tree] = ""
+    visit(tree, "")
+    return out
+
+
+def _symbol(quals: Dict[ast.AST, str], node: ast.AST) -> str:
+    return quals.get(node, "") or "<module>"
+
+
+# -- check 1: silent-fallback ----------------------------------------------
+
+_BROAD = {"Exception", "BaseException"}
+_RECORDING_TAILS = {"inc", "observe", "set", "set_attr", "warn", "warning",
+                    "error", "exception", "record", "debug", "info"}
+_RECORDING_PREFIXES = ("obs.", "logging.", "logger.", "log.", "warnings.")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:
+        return True
+    types = handler.type.elts if isinstance(handler.type, ast.Tuple) \
+        else [handler.type]
+    for t in types:
+        d = dotted(t) or ""
+        if d.split(".")[-1] in _BROAD:
+            return True
+    return False
+
+
+def _records_failure(handler: ast.ExceptHandler) -> bool:
+    """Does the handler leave a trace — an obs/log call, or does it keep
+    the bound exception (``as e``) alive for a later surfacing?"""
+    for stmt in handler.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                tail = d.split(".")[-1]
+                if (d.startswith(_RECORDING_PREFIXES) or ".obs." in d
+                        or tail in _RECORDING_TAILS
+                        or tail.startswith("record_")):
+                    return True
+            if (handler.name and isinstance(node, ast.Name)
+                    and node.id == handler.name):
+                return True  # exception object stored/forwarded, not dropped
+    return False
+
+
+def check_silent_fallback(tree, quals, path) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad(node):
+            continue
+        terminal_raise = bool(node.body) and isinstance(node.body[-1],
+                                                        ast.Raise)
+        if terminal_raise or _records_failure(node):
+            continue
+        out.append(Finding(
+            check="silent-fallback", path=path, line=node.lineno,
+            col=node.col_offset, symbol=_symbol(quals, node),
+            message="broad except swallows the failure on at least one "
+                    "path: record it (repro.obs counter/span attr/log, or "
+                    "keep the bound exception for a later raise) or "
+                    "re-raise as the final statement"))
+    return out
+
+
+# -- check 2: canonical-selection ------------------------------------------
+
+_SELECT_TAILS = {"argpartition", "topk", "top_k"}
+_BLESSED_FILES = ("kernels/select.py", "kernels/ref.py")
+_BLESSED_FUNCS = {"_topm_rows", "_argpartition_rows"}
+
+
+def _blessed_scope(path: str, symbol: str) -> bool:
+    if path.replace("\\", "/").endswith(_BLESSED_FILES):
+        return True
+    return any(part in _BLESSED_FUNCS for part in symbol.split("."))
+
+
+def _is_take_slice(sl) -> bool:
+    dims = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+    for d in dims:
+        if isinstance(d, ast.Slice) and d.step is None \
+                and (d.lower is None) != (d.upper is None):
+            return True
+    return False
+
+
+def check_canonical_selection(tree, quals, path) -> List[Finding]:
+    out = []
+
+    def flag(node, what):
+        sym = _symbol(quals, node)
+        if _blessed_scope(path, sym):
+            return
+        out.append(Finding(
+            check="canonical-selection", path=path, line=node.lineno,
+            col=node.col_offset, symbol=sym,
+            message=f"raw {what} bypasses the tie-repaired selection "
+                    f"policy — route through _topm_rows / "
+                    f"kernels/select.py, or justify why this selection's "
+                    f"ties are canonical by construction"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func) or ""
+            if d.split(".")[-1] in _SELECT_TAILS:
+                flag(node, f"{d or 'selection'}()")
+        elif isinstance(node, ast.Subscript):
+            v = node.value
+            if isinstance(v, ast.Call):
+                dv = dotted(v.func) or ""
+                if dv.split(".")[-1] == "argsort" \
+                        and _is_take_slice(node.slice):
+                    flag(node, f"selection-argsort ({dv}()[…:…])")
+    return out
+
+
+# -- check 3: kernel-oracle -------------------------------------------------
+
+
+def _has_pallas_call(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func) or ""
+            if d.split(".")[-1] == "pallas_call":
+                return True
+    return False
+
+
+def kernel_entry_points(tree) -> List[ast.FunctionDef]:
+    """Public top-level functions whose body reaches a ``pl.pallas_call``."""
+    return [n for n in tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_") and _has_pallas_call(n)]
+
+
+def oracle_names(ref_tree) -> List[str]:
+    return [n.name for n in ref_tree.body
+            if isinstance(n, ast.FunctionDef) and n.name.endswith("_ref")]
+
+
+def match_oracle(kernel: str, oracles: Iterable[str]) -> Optional[str]:
+    """Pair ``fused_rerank_scores``→``rerank_scores_ref``,
+    ``flash_attention``→``attention_ref``, ``select_topm``→``select_topm_ref``:
+    the kernel name equals or suffixes the oracle's base name."""
+    for o in oracles:
+        base = o[: -len("_ref")]
+        if kernel == base or kernel.endswith("_" + base):
+            return o
+    return None
+
+
+def check_kernel_oracle(kernel_path: str, tree, ref_tree,
+                        test_texts: Dict[str, str]) -> List[Finding]:
+    out = []
+    oracles = oracle_names(ref_tree) if ref_tree is not None else []
+    for fn in kernel_entry_points(tree):
+        oracle = match_oracle(fn.name, oracles)
+        if oracle is None:
+            out.append(Finding(
+                check="kernel-oracle", path=kernel_path, line=fn.lineno,
+                col=fn.col_offset, symbol=fn.name,
+                message=f"Pallas kernel {fn.name!r} has no oracle in "
+                        f"kernels/ref.py (expected a *_ref whose base name "
+                        f"the kernel name equals or suffixes)"))
+            continue
+        if test_texts and not any(fn.name in text and oracle in text
+                                  for text in test_texts.values()):
+            out.append(Finding(
+                check="kernel-oracle", path=kernel_path, line=fn.lineno,
+                col=fn.col_offset, symbol=fn.name,
+                message=f"no test file references both {fn.name!r} and its "
+                        f"oracle {oracle!r} — the kernel/oracle pair is "
+                        f"untested together"))
+    return out
+
+
+# -- check 4: host-transfer -------------------------------------------------
+
+_HOST_CALLS = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+
+
+def _is_jit_decorator(dec) -> bool:
+    d = dotted(dec)
+    if d is not None and (d == "jit" or d.endswith(".jit")):
+        return True
+    if isinstance(dec, ast.Call):
+        dd = dotted(dec.func) or ""
+        if dd == "jit" or dd.endswith(".jit"):
+            return True       # @jax.jit(static_argnames=…)
+        if dd.split(".")[-1] == "partial" and dec.args:
+            a0 = dotted(dec.args[0]) or ""
+            if a0 == "jit" or a0.endswith(".jit"):
+                return True   # @functools.partial(jax.jit, …)
+    return False
+
+
+def check_host_transfer(tree, quals, path) -> List[Finding]:
+    out = []
+
+    def flag(node, fn, what):
+        out.append(Finding(
+            check="host-transfer", path=path, line=node.lineno,
+            col=node.col_offset,
+            symbol=_symbol(quals, node),
+            message=f"{what} inside jitted {fn.name!r} forces a host "
+                    f"round-trip (or a tracer error) on a traced value — "
+                    f"hoist it out of the jitted region"))
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        if not any(_is_jit_decorator(d) for d in fn.decorator_list):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            tail = d.split(".")[-1]
+            if isinstance(node.func, ast.Attribute) and tail == "item" \
+                    and not node.args and not node.keywords:
+                flag(node, fn, ".item()")
+            elif d in _HOST_CALLS:
+                flag(node, fn, f"{d}()")
+            elif tail == "device_get":
+                flag(node, fn, f"{d}()")
+            elif isinstance(node.func, ast.Name) and d == "float" \
+                    and len(node.args) == 1 \
+                    and not isinstance(node.args[0], ast.Constant):
+                flag(node, fn, "float()")
+    return out
+
+
+# -- check 5: lock-discipline -----------------------------------------------
+
+
+def _is_lockish_name(attr: str) -> bool:
+    return "lock" in attr.lower()
+
+
+def _lock_attr_of_with_item(item) -> Optional[str]:
+    d = dotted(item.context_expr) or ""
+    tail = d.split(".")[-1]
+    return tail if _is_lockish_name(tail) else None
+
+
+class _Access:
+    __slots__ = ("unit", "guarded", "line", "col", "write")
+
+    def __init__(self, unit, guarded, line, col, write):
+        self.unit, self.guarded = unit, guarded
+        self.line, self.col, self.write = line, col, write
+
+
+def _collect_class(cls: ast.ClassDef):
+    """Per class: self-attribute accesses tagged (unit, guarded), the
+    intra-class call graph, thread entry units, and declared lock attrs.
+
+    A *unit* is ``"method"`` or ``"method.nested"`` (nested defs close
+    over ``self`` and become thread bodies via ``Thread(target=work)``).
+    """
+    accesses: Dict[str, List[_Access]] = {}
+    calls: Dict[str, Set[str]] = {}
+    thread_entries: Set[str] = set()
+    lock_attrs: Set[str] = set()
+
+    def note(attr, unit, guarded, node, write):
+        accesses.setdefault(attr, []).append(
+            _Access(unit, guarded, node.lineno, node.col_offset, write))
+
+    def scan(stmts, unit, guarded, nested_defs):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sub = f"{unit.split('.')[0]}.{stmt.name}"
+                nested_defs[stmt.name] = sub
+                scan(stmt.body, sub, guarded, nested_defs)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                locked = any(_lock_attr_of_with_item(i) for i in stmt.items)
+                for i in stmt.items:
+                    _scan_expr(i.context_expr, unit, guarded, nested_defs)
+                scan(stmt.body, unit, guarded or locked, nested_defs)
+                continue
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    continue
+                _scan_expr(child, unit, guarded, nested_defs)
+            # recurse into nested statement blocks (if/for/try/…)
+            inner = [c for c in ast.iter_child_nodes(stmt)
+                     if isinstance(c, (ast.stmt, ast.ExceptHandler))]
+            if inner:
+                scan(inner, unit, guarded, nested_defs)
+
+    def _scan_expr(expr, unit, guarded, nested_defs):
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                write = isinstance(node.ctx, (ast.Store, ast.Del))
+                note(node.attr, unit, guarded, node, write)
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                parts = d.split(".")
+                # intra-class call graph: self.m(…)
+                if len(parts) == 2 and parts[0] == "self":
+                    calls.setdefault(unit, set()).add(parts[1])
+                # thread entries: Thread(target=self.m | target=work)
+                if parts[-1] == "Thread":
+                    for kw in node.keywords:
+                        if kw.arg == "target":
+                            td = dotted(kw.value) or ""
+                            tp = td.split(".")
+                            if len(tp) == 2 and tp[0] == "self":
+                                thread_entries.add(tp[1])
+                            elif td in nested_defs:
+                                thread_entries.add(nested_defs[td])
+                # pool.submit(self.m, …)
+                if parts[-1] == "submit" and node.args:
+                    ad = dotted(node.args[0]) or ""
+                    ap = ad.split(".")
+                    if len(ap) == 2 and ap[0] == "self":
+                        thread_entries.add(ap[1])
+                # lock declarations: self.x = threading.Lock()
+                if parts[-1] in ("Lock", "RLock"):
+                    pass  # handled below via the Assign form
+
+    for meth in cls.body:
+        if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # lock attrs: self.x = …Lock()/RLock(), or any self.*lock* binding
+        for node in ast.walk(meth):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == "self":
+                        vd = dotted(getattr(node.value, "func", None)) or ""
+                        if vd.split(".")[-1] in ("Lock", "RLock") \
+                                or _is_lockish_name(tgt.attr):
+                            lock_attrs.add(tgt.attr)
+        scan(meth.body, meth.name, False, {})
+
+    # transitive thread reachability over self.m() edges
+    reachable = set(thread_entries)
+    frontier = list(thread_entries)
+    while frontier:
+        u = frontier.pop()
+        for callee in calls.get(u, set()):
+            if callee not in reachable:
+                reachable.add(callee)
+                frontier.append(callee)
+    return accesses, reachable, lock_attrs
+
+
+_EXEMPT_UNITS = {"__init__", "__new__", "__del__"}
+
+
+def check_lock_discipline(tree, quals, path) -> List[Finding]:
+    out = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        accesses, reachable, lock_attrs = _collect_class(cls)
+        cls_sym = _symbol(quals, cls)
+        qual = f"{cls_sym}.{cls.name}" if cls_sym != "<module>" else cls.name
+        for attr, accs in accesses.items():
+            if attr in lock_attrs:
+                continue
+            live = [a for a in accs
+                    if a.unit.split(".")[0] not in _EXEMPT_UNITS]
+            writes = [a for a in live if a.write]
+            if not writes:
+                continue
+            guarded_writes = [a for a in writes if a.guarded]
+            unguarded_writes = [a for a in writes if not a.guarded]
+            # (a) mixed guard: locked somewhere, bare elsewhere
+            if guarded_writes and unguarded_writes:
+                for a in unguarded_writes:
+                    out.append(Finding(
+                        check="lock-discipline", path=path, line=a.line,
+                        col=a.col, symbol=f"{qual}.{a.unit}",
+                        message=f"self.{attr} is written under a lock in "
+                                f"{guarded_writes[0].unit!r} but written "
+                                f"bare here — hold the owning lock for "
+                                f"every write"))
+                continue
+            # (b) thread-side bare write + caller-facing access
+            if not reachable:
+                continue
+            thread_writes = [a for a in unguarded_writes
+                             if a.unit in reachable]
+            outside = [a for a in live if a.unit not in reachable]
+            if thread_writes and outside:
+                a = thread_writes[0]
+                o = outside[0]
+                out.append(Finding(
+                    check="lock-discipline", path=path, line=a.line,
+                    col=a.col, symbol=f"{qual}.{a.unit}",
+                    message=f"self.{attr} is written on the "
+                            f"{a.unit!r} thread without a lock but "
+                            f"accessed from caller-facing {o.unit!r} "
+                            f"(line {o.line}) — guard both sides or move "
+                            f"the state into the metrics registry"))
+    return out
+
+
+# -- registry ---------------------------------------------------------------
+
+LOCAL_CHECKS = (
+    check_silent_fallback,
+    check_canonical_selection,
+    check_host_transfer,
+    check_lock_discipline,
+)
+
+
+def run_local_checks(tree, source: str, path: str) -> List[Finding]:
+    quals = _qualnames(tree)
+    out: List[Finding] = []
+    for check in LOCAL_CHECKS:
+        out.extend(check(tree, quals, path))
+    return out

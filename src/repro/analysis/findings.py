@@ -1,0 +1,213 @@
+"""Finding model, inline suppressions, and the reasoned baseline.
+
+A :class:`Finding` is one rule violation at a source location.  Two
+mechanisms can silence one, and both require a written reason:
+
+* **Inline suppression** — a comment on the offending line (or the line
+  directly above, for statements that wrap)::
+
+      x = lax.top_k(-d, spill)  # reprolint: disable=canonical-selection -- ties break toward the lowest cluster id by construction
+
+  ``disable=`` takes a comma-separated check list or ``all``.  The
+  ``-- reason`` clause is mandatory: a reasonless ``disable`` suppresses
+  nothing and is itself reported as a ``bad-suppression`` finding.
+
+* **Baseline** — ``reprolint_baseline.json`` at the repo root carries
+  ``{check, path, symbol, reason}`` entries keyed by the enclosing
+  function/class qualname rather than line numbers, so the gate survives
+  unrelated edits.  The CLI reports stale entries (baselined symbols that
+  no longer fire) so the file shrinks as debt is paid down.
+
+Neither mechanism is a free pass: both leave the reason in the JSON
+report that CI uploads, so every silenced finding stays auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+CHECKS = (
+    "silent-fallback",      # broad except must record or re-raise
+    "canonical-selection",  # raw top-M outside the tie-repaired policy
+    "kernel-oracle",        # every Pallas kernel pairs with a ref + test
+    "host-transfer",        # host round-trips inside jitted functions
+    "lock-discipline",      # shared attrs written off-lock
+)
+BAD_SUPPRESSION = "bad-suppression"
+
+
+@dataclasses.dataclass
+class Finding:
+    check: str
+    path: str                 # posix path as given to the analyzer
+    line: int
+    col: int
+    symbol: str               # enclosing qualname ("Cls.method") or "<module>"
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+    baselined: bool = False
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.check, self.path, self.symbol)
+
+    @property
+    def active(self) -> bool:
+        """True when the finding gates (not suppressed, not baselined)."""
+        return not (self.suppressed or self.baselined)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        tag = ""
+        if self.suppressed:
+            tag = f"  [suppressed: {self.suppress_reason}]"
+        elif self.baselined:
+            tag = "  [baselined]"
+        return (f"{self.path}:{self.line}:{self.col}: {self.check} "
+                f"({self.symbol}) {self.message}{tag}")
+
+
+# -- inline suppressions ----------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([\w\-, ]+?)\s*(?:--\s*(\S.*?))?\s*$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    checks: frozenset            # check names, or {"all"}
+    reason: str
+
+    def covers(self, check: str) -> bool:
+        return bool(self.reason) and \
+            ("all" in self.checks or check in self.checks)
+
+
+def parse_suppressions(source: str, path: str) -> Tuple[Dict[int, Suppression],
+                                                        List[Finding]]:
+    """Extract ``# reprolint: disable=…`` comments via tokenize (so the
+    marker inside a string literal is not a suppression).  Returns the
+    per-line map plus ``bad-suppression`` findings for reasonless ones."""
+    out: Dict[int, Suppression] = {}
+    bad: List[Finding] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.start[1], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenizeError:
+        comments = []
+    for line, col, text in comments:
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        checks = frozenset(c.strip() for c in m.group(1).split(",")
+                           if c.strip())
+        reason = (m.group(2) or "").strip()
+        sup = Suppression(line=line, checks=checks, reason=reason)
+        out[line] = sup
+        if not reason:
+            bad.append(Finding(
+                check=BAD_SUPPRESSION, path=path, line=line, col=col,
+                symbol="<comment>",
+                message="suppression without a reason: write "
+                        "'# reprolint: disable=<check> -- <why>'"))
+        unknown = checks - set(CHECKS) - {"all"}
+        if unknown:
+            bad.append(Finding(
+                check=BAD_SUPPRESSION, path=path, line=line, col=col,
+                symbol="<comment>",
+                message=f"unknown check(s) in suppression: "
+                        f"{', '.join(sorted(unknown))}"))
+    return out, bad
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       sups: Dict[int, Suppression]) -> None:
+    """Mark findings covered by a suppression on their own line or the
+    line directly above (for statements that wrap past the comment)."""
+    for f in findings:
+        for line in (f.line, f.line - 1):
+            sup = sups.get(line)
+            if sup is not None and sup.covers(f.check):
+                f.suppressed = True
+                f.suppress_reason = sup.reason
+                break
+
+
+# -- baseline ---------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path) -> Dict[Tuple[str, str, str], str]:
+    """``{(check, path, symbol): reason}`` from the committed baseline."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{data.get('version')!r}")
+    out = {}
+    for e in data.get("entries", []):
+        reason = e.get("reason", "").strip()
+        if not reason:
+            raise ValueError(f"baseline entry without a reason in {path}: "
+                             f"{e!r} — the gate only starts honest if every "
+                             f"grandfathered finding says why")
+        out[(e["check"], e["path"], e["symbol"])] = reason
+    return out
+
+
+def apply_baseline(findings: Iterable[Finding],
+                   baseline: Dict[Tuple[str, str, str], str]
+                   ) -> List[Tuple[str, str, str]]:
+    """Mark baselined findings in place; return stale baseline keys (entries
+    that matched nothing — candidates for deletion)."""
+    hit = set()
+    for f in findings:
+        if f.suppressed:
+            continue
+        if f.key in baseline:
+            f.baselined = True
+            hit.add(f.key)
+    return [k for k in baseline if k not in hit]
+
+
+def write_baseline(path, findings: Iterable[Finding]) -> int:
+    """Grandfather every active finding with a TODO reason (the operator
+    is expected to replace each placeholder before committing)."""
+    entries = []
+    seen = set()
+    for f in findings:
+        if f.suppressed or f.check == BAD_SUPPRESSION or f.key in seen:
+            continue
+        seen.add(f.key)
+        entries.append({"check": f.check, "path": f.path,
+                        "symbol": f.symbol,
+                        "reason": "TODO: justify or fix"})
+    Path(path).write_text(json.dumps(
+        {"version": BASELINE_VERSION, "entries": entries}, indent=2) + "\n")
+    return len(entries)
+
+
+def report_json(findings: Iterable[Finding], *, stale=None) -> dict:
+    fs = list(findings)
+    return {
+        "schema": "repro.analysis.findings/v1",
+        "n_active": sum(1 for f in fs if f.active),
+        "n_suppressed": sum(1 for f in fs if f.suppressed),
+        "n_baselined": sum(1 for f in fs if f.baselined),
+        "stale_baseline": [list(k) for k in (stale or [])],
+        "findings": [f.to_json() for f in fs],
+    }

@@ -1,0 +1,155 @@
+"""reprolint orchestration: collect files, run checks, gate on the baseline.
+
+``python -m repro.analysis src/`` is the CI entry point — exit 0 means
+every finding is either inline-suppressed with a reason or carried by the
+committed ``reprolint_baseline.json``; anything else exits 1 and prints
+the offending locations.  ``--json`` writes the full findings report
+(including suppressed/baselined ones and their reasons) for the CI
+artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import checks as C
+from repro.analysis import findings as F
+
+DEFAULT_BASELINE = "reprolint_baseline.json"
+
+
+def _rel(p: Path) -> Path:
+    # normalise to cwd-relative so finding paths match the committed
+    # baseline (which is keyed repo-relative) even when the scan is
+    # invoked with absolute paths; paths outside cwd stay as given
+    try:
+        return p.resolve().relative_to(Path.cwd())
+    except ValueError:
+        return p
+
+
+def iter_py_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(_rel(q) for q in path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(_rel(path))
+    return out
+
+
+def _parse(path: Path):
+    src = path.read_text()
+    return src, ast.parse(src, filename=str(path))
+
+
+def _is_kernel_module(path: Path) -> bool:
+    return path.parent.name == "kernels" and \
+        path.name not in ("__init__.py", "ref.py")
+
+
+def analyze_paths(paths: Sequence[str], *,
+                  tests_dir: Optional[str] = "tests") -> List[F.Finding]:
+    """Run every check over the given files/dirs; returns findings with
+    inline suppressions already applied (baseline is the caller's job)."""
+    all_findings: List[F.Finding] = []
+    ref_cache: Dict[Path, Optional[ast.AST]] = {}
+    test_texts: Dict[str, str] = {}
+    tdir = Path(tests_dir) if tests_dir else None
+    if tdir is not None and tdir.is_dir():
+        test_texts = {str(p): p.read_text() for p in sorted(tdir.rglob("*.py"))}
+
+    for path in iter_py_files(paths):
+        try:
+            src, tree = _parse(path)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            all_findings.append(F.Finding(
+                check="silent-fallback", path=str(path), line=1, col=0,
+                symbol="<module>", message=f"unparseable file: {e}"))
+            continue
+        file_findings = C.run_local_checks(tree, src, str(path))
+        if _is_kernel_module(path):
+            ref_path = path.parent / "ref.py"
+            if ref_path not in ref_cache:
+                try:
+                    ref_cache[ref_path] = ast.parse(ref_path.read_text()) \
+                        if ref_path.exists() else None
+                except SyntaxError:
+                    ref_cache[ref_path] = None
+            file_findings.extend(C.check_kernel_oracle(
+                str(path), tree, ref_cache[ref_path], test_texts))
+        sups, bad = F.parse_suppressions(src, str(path))
+        F.apply_suppressions(file_findings, sups)
+        file_findings.extend(bad)
+        all_findings.extend(file_findings)
+    return all_findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: enforce the repo's concurrency and "
+                    "numerical-policy invariants statically")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"reasoned baseline file (default "
+                         f"{DEFAULT_BASELINE}; missing file = empty)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report raw findings)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="grandfather current findings into the baseline "
+                         "with TODO reasons (then edit the reasons!)")
+    ap.add_argument("--tests-dir", default="tests",
+                    help="tests root for the kernel-oracle pairing check "
+                         "(default ./tests; pass '' to skip)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full findings report as JSON")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print suppressed and baselined findings")
+    args = ap.parse_args(argv)
+
+    fs = analyze_paths(args.paths, tests_dir=args.tests_dir or None)
+
+    if args.update_baseline:
+        n = F.write_baseline(args.baseline, fs)
+        print(f"reprolint: wrote {n} baseline entr{'y' if n == 1 else 'ies'} "
+              f"to {args.baseline} — replace every TODO reason before "
+              f"committing")
+        return 0
+
+    stale: List = []
+    if not args.no_baseline:
+        try:
+            baseline = F.load_baseline(args.baseline)
+        except ValueError as e:
+            print(f"reprolint: bad baseline: {e}", file=sys.stderr)
+            return 2
+        stale = F.apply_baseline(fs, baseline)
+
+    if args.json:
+        import json
+        Path(args.json).write_text(
+            json.dumps(F.report_json(fs, stale=stale), indent=2) + "\n")
+
+    active = [f for f in fs if f.active]
+    shown = fs if args.verbose else active
+    for f in sorted(shown, key=lambda f: (f.path, f.line, f.check)):
+        print(f)
+    for key in stale:
+        print(f"reprolint: stale baseline entry (no longer fires, delete "
+              f"it): {key}")
+    n_sup = sum(1 for f in fs if f.suppressed)
+    n_base = sum(1 for f in fs if f.baselined)
+    print(f"reprolint: {len(active)} finding(s) "
+          f"({n_sup} suppressed with reasons, {n_base} baselined) over "
+          f"{len(iter_py_files(args.paths))} file(s)")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

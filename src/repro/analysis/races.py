@@ -1,0 +1,267 @@
+"""Runtime race harness: instrumented locks + attribute tracing.
+
+A lightweight Python take on the Eraser lockset algorithm for the serving
+tier.  Wrap the shared objects (the :class:`~repro.core.facade.CFEngine`,
+the :class:`~repro.serving.engine.BatchingServer`) in a
+:class:`RaceTracer` while the existing concurrency stress tests run::
+
+    tracer = RaceTracer()
+    with tracer.trace(engine, "engine"), tracer.trace(server, "server"):
+        … concurrent submits + update_ratings …
+    tracer.assert_clean()
+
+Every instance-attribute read/write is tagged with the accessing thread
+and the set of instrumented locks it holds (``threading.Lock``/``RLock``
+attributes on traced objects are swapped for counting wrappers).  Each
+attribute walks the Eraser state machine:
+
+    exclusive (one thread) → shared (second thread reads)
+                           → shared-modified (any write while shared)
+
+In the shared states the attribute's *candidate lockset* is intersected
+with the locks held at each access; a shared-modified attribute whose
+candidate lockset goes empty is reported — some interleaving of the
+observed accesses reads a torn/mid-update value.  Init-time writes never
+false-positive: they happen in the exclusive state.
+
+Deliberate lock-free designs are annotated, not silenced: a class-level
+``_reprolint_race_ok = {"attr": "reason", …}`` marks findings on those
+attributes suppressed (the reason is carried in the report), mirroring
+the linter's reasoned-suppression contract.  The single-writer
+atomic-snapshot publish in ``CFEngine`` is the canonical example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, FrozenSet, List, Optional, Set, Tuple
+
+_LOCK_TYPES = (type(threading.Lock()), type(threading.RLock()))
+
+
+@dataclasses.dataclass
+class Site:
+    thread: int
+    op: str                  # "read" | "write"
+    function: str
+    filename: str
+    line: int
+
+    def __str__(self) -> str:
+        return (f"{self.op} in {self.function} "
+                f"({self.filename}:{self.line}, thread {self.thread})")
+
+
+@dataclasses.dataclass
+class RaceFinding:
+    obj: str
+    attr: str
+    kind: str                # "write/write" | "read/write"
+    threads: Tuple[int, ...]
+    sites: List[Site]
+    suppressed: bool = False
+    reason: str = ""
+
+    def __str__(self) -> str:
+        tag = f"  [annotated: {self.reason}]" if self.suppressed else ""
+        where = "; ".join(str(s) for s in self.sites)
+        return (f"{self.obj}.{self.attr}: unguarded {self.kind} conflict "
+                f"across threads {sorted(set(self.threads))} — {where}{tag}")
+
+
+class _InstrumentedLock:
+    """Counting wrapper delegating to the real lock; membership in the
+    per-thread held set is what the lockset algorithm intersects."""
+
+    def __init__(self, inner, name: str, tracer: "RaceTracer"):
+        self._inner = inner
+        self._name = name
+        self._tracer = tracer
+
+    def acquire(self, *a, **kw):
+        got = self._inner.acquire(*a, **kw)
+        if got:
+            self._tracer._held_list().append(id(self))
+        return got
+
+    def release(self):
+        held = self._tracer._held_list()
+        if id(self) in held:
+            held.remove(id(self))
+        self._inner.release()
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+
+class _AttrState:
+    __slots__ = ("owner", "state", "lockset", "writers", "threads",
+                 "sites", "reported")
+
+    def __init__(self, owner: int):
+        self.owner = owner
+        self.state = "exclusive"
+        self.lockset: Optional[FrozenSet[int]] = None   # None = universe
+        self.writers: Set[int] = set()
+        self.threads: Set[int] = {owner}
+        self.sites: List[Site] = []
+        self.reported = False
+
+
+_MAX_SITES = 6
+
+
+class RaceTracer:
+    """Traces attribute accesses on enrolled objects (see module doc)."""
+
+    def __init__(self):
+        self._mu = threading.Lock()          # guards tracer state itself
+        self._tls = threading.local()
+        self._state: Dict[Tuple[int, str], _AttrState] = {}
+        self._labels: Dict[int, str] = {}
+        self._annotations: Dict[int, Dict[str, str]] = {}
+        self._skip_attrs: Dict[int, Set[str]] = {}
+        self._findings: List[RaceFinding] = []
+        self._class_cache: Dict[type, type] = {}
+
+    # -- lockset bookkeeping ------------------------------------------------
+    def _held_list(self) -> list:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    # -- enrolment ----------------------------------------------------------
+    @contextmanager
+    def trace(self, obj: Any, name: Optional[str] = None):
+        """Enroll ``obj`` for the duration of the context: its class is
+        swapped for a tracing subclass and its lock attributes for
+        instrumented wrappers; both are restored on exit."""
+        cls = type(obj)
+        label = name or cls.__name__
+        ann: Dict[str, str] = {}
+        for klass in reversed(cls.__mro__):
+            ann.update(getattr(klass, "_reprolint_race_ok", {}) or {})
+        swapped: Dict[str, Any] = {}
+        for attr, value in list(obj.__dict__.items()):
+            if isinstance(value, _LOCK_TYPES):
+                swapped[attr] = value
+                object.__setattr__(obj, attr,
+                                   _InstrumentedLock(value, attr, self))
+        with self._mu:
+            self._labels[id(obj)] = label
+            self._annotations[id(obj)] = ann
+            self._skip_attrs[id(obj)] = set(swapped)
+        traced_cls = self._traced_class(cls)
+        obj.__class__ = traced_cls
+        try:
+            yield self
+        finally:
+            obj.__class__ = cls
+            for attr, value in swapped.items():
+                object.__setattr__(obj, attr, value)
+
+    def _traced_class(self, cls: type) -> type:
+        cached = self._class_cache.get(cls)
+        if cached is not None:
+            return cached
+        tracer = self
+
+        def __getattribute__(self, name):
+            if not (name.startswith("__") and name.endswith("__")):
+                d = object.__getattribute__(self, "__dict__")
+                if name in d and not isinstance(d[name], _InstrumentedLock):
+                    tracer._note(self, name, "read")
+            return cls.__getattribute__(self, name)
+
+        def __setattr__(self, name, value):
+            if not isinstance(value, _InstrumentedLock) \
+                    and not (name.startswith("__") and name.endswith("__")):
+                tracer._note(self, name, "write")
+            cls.__setattr__(self, name, value)
+
+        traced = type(f"_Traced{cls.__name__}", (cls,), {
+            "__getattribute__": __getattribute__,
+            "__setattr__": __setattr__,
+        })
+        self._class_cache[cls] = traced
+        return traced
+
+    # -- the lockset state machine ------------------------------------------
+    def _note(self, obj: Any, attr: str, op: str) -> None:
+        oid = id(obj)
+        if attr in self._skip_attrs.get(oid, ()):
+            return
+        t = threading.get_ident()
+        held = frozenset(self._held_list())
+        frame = sys._getframe(2)
+        with self._mu:
+            key = (oid, attr)
+            st = self._state.get(key)
+            if st is None:
+                st = self._state[key] = _AttrState(t)
+                if op == "write":
+                    st.writers.add(t)
+                return
+            if st.state == "exclusive" and t == st.owner:
+                if op == "write":
+                    st.writers.add(t)
+                return
+            # a second thread arrived (or we are already shared)
+            if st.state == "exclusive":
+                st.state = "shared_mod" if op == "write" else "shared"
+                st.lockset = held
+            else:
+                st.lockset = held if st.lockset is None \
+                    else st.lockset & held
+                if op == "write":
+                    st.state = "shared_mod"
+            st.threads.add(t)
+            if op == "write":
+                st.writers.add(t)
+            if len(st.sites) < _MAX_SITES:
+                st.sites.append(Site(
+                    thread=t, op=op, function=frame.f_code.co_name,
+                    filename=frame.f_code.co_filename.rsplit("/", 1)[-1],
+                    line=frame.f_lineno))
+            if st.state == "shared_mod" and not st.lockset \
+                    and not st.reported:
+                st.reported = True
+                ann = self._annotations.get(oid, {})
+                kind = "write/write" if len(st.writers) > 1 \
+                    else "read/write"
+                self._findings.append(RaceFinding(
+                    obj=self._labels.get(oid, type(obj).__name__),
+                    attr=attr, kind=kind,
+                    threads=tuple(sorted(st.threads)),
+                    sites=list(st.sites),
+                    suppressed=attr in ann,
+                    reason=ann.get(attr, "")))
+
+    # -- reporting ----------------------------------------------------------
+    def report(self, include_suppressed: bool = False) -> List[RaceFinding]:
+        with self._mu:
+            fs = list(self._findings)
+        return fs if include_suppressed \
+            else [f for f in fs if not f.suppressed]
+
+    def assert_clean(self) -> None:
+        """Raise with every unannotated conflict (the test-suite gate)."""
+        bad = self.report()
+        if bad:
+            lines = "\n  ".join(str(f) for f in bad)
+            raise AssertionError(
+                f"race harness found {len(bad)} unguarded conflict(s):\n  "
+                f"{lines}\n(fix with a lock, or annotate the attribute in "
+                f"the class's _reprolint_race_ok with a written reason)")

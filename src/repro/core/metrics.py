@@ -71,6 +71,7 @@ def topn_precision_recall(pred: jnp.ndarray, truth: jnp.ndarray,
                           ) -> Dict[str, jnp.ndarray]:
     """Recommendation-list variant: top-n unseen items vs relevant test items."""
     masked = jnp.where(seen_mask, -jnp.inf, pred)
+    # reprolint: disable=canonical-selection -- offline eval metric: hit counting is permutation-invariant within a tie set
     _, items = jax.lax.top_k(masked, n)
     rel = (truth >= threshold) & ~seen_mask           # (U, I) relevant & unseen
     rows = jnp.arange(pred.shape[0])[:, None]

@@ -224,6 +224,7 @@ def predict_dense(ratings: jnp.ndarray, weight_matrix: jnp.ndarray, *,
 def recommend_topn(pred: jnp.ndarray, seen_mask: jnp.ndarray, n: int):
     """Top-n unseen items per user from a predicted rating matrix."""
     masked = jnp.where(seen_mask, -jnp.inf, pred)
+    # reprolint: disable=canonical-selection -- XLA top_k ties break toward the lower item id (the recommend contract); topn_unseen sanitises -inf slots
     scores, items = jax.lax.top_k(masked, n)
     return scores, items
 

@@ -123,6 +123,7 @@ class AsyncCheckpointer:
                 save(self.dir, step, snapshot)
                 self._gc()
             except Exception as e:        # surfaced on next wait()
+                # reprolint: disable=lock-discipline -- single outstanding writer; wait() joins the thread before reading, which is a happens-before edge
                 self.last_error = e
 
         self._thread = threading.Thread(target=work, daemon=True)

@@ -338,6 +338,7 @@ def _spill_assign(proxies, centroids, *, spill, block_size, use_kernel,
     def body(_, blk):
         d = centroid_distances(blk, centroids, use_kernel=use_kernel,
                                interpret=interpret)
+        # reprolint: disable=canonical-selection -- negated-distance ties break toward the lowest cluster id: canonical by construction
         neg_d, ids = jax.lax.top_k(-d, spill)   # ties → lowest cluster id
         return (), (-neg_d, ids.astype(jnp.int32))
 
@@ -353,6 +354,7 @@ def _probe_clusters(proxies, centroids, q_ids, *, n_probe, use_kernel,
     zq = proxies[jnp.clip(q_ids, 0, proxies.shape[0] - 1)]
     d = centroid_distances(zq, centroids, use_kernel=use_kernel,
                            interpret=interpret)
+    # reprolint: disable=canonical-selection -- probe-cluster ties break toward the lowest cluster id: canonical by construction
     _, probe = jax.lax.top_k(-d, n_probe)
     return probe
 
@@ -716,6 +718,7 @@ def _fused_scan_restricted(proxies, cand_pad, q_ids, *, m, use_pallas,
             sp, jnp.full(q_ids.shape, -1, jnp.int32), m=m,
             interpret=interpret)
     else:
+        # reprolint: disable=canonical-selection -- exact lax.top_k twin of kernels/select.py: XLA ties break toward the lower index, same canonical (-score, id) order
         v, sel = jax.lax.top_k(sp, m)
     # block-local → global, masking sentinels *before* the gather (the
     # select contract: -inf slots carry the local sentinel id L)
@@ -1723,6 +1726,7 @@ class ClusteredIndex(_SpillClusterCore):
                 taus[i0:i1] = np.inf
                 continue
             if use_t:
+                # reprolint: disable=canonical-selection -- threshold sampling only: the kk-th VALUE feeds the survivor cut, ids are never consumed, so tie order cannot leak
                 v = _torch.topk(scr_t[:i1 - i0, :i1 - i0], kk, dim=1,
                                 sorted=True)[0]
                 taus[i0:i1] = v[:, -1].numpy()
@@ -2309,6 +2313,7 @@ class ClusteredIndex(_SpillClusterCore):
 
         # canonical host selection: stable sort on descending score over
         # the ascending shortlist reproduces the exact (-score, id) order
+        # reprolint: disable=canonical-selection -- stable argsort over ascending-id columns IS the canonical (-score, id) order
         o = np.argsort(-scores_h, axis=1, kind="stable")[:, :k]
         top_s = np.take_along_axis(scores_h, o, axis=1)
         top_i = np.take_along_axis(sh_h, o, axis=1).astype(np.int32)
@@ -2379,6 +2384,7 @@ class ClusteredIndex(_SpillClusterCore):
             colmap[cu] = np.arange(len(cu))
             sc = np.take_along_axis(s_ext, colmap[sh], axis=1)  # (g, M)
             sc[sh == q[:, None]] = neg
+            # reprolint: disable=canonical-selection -- stable argsort over ascending-id shortlist columns IS the canonical (-score, id) order
             o = np.argsort(-sc, axis=1, kind="stable")[:, :k]
             top_s = np.take_along_axis(sc, o, axis=1)
             top_i = np.take_along_axis(sh, o, axis=1).astype(np.int32)

@@ -492,6 +492,7 @@ class ItemClusteredIndex(_SpillClusterCore):
                 cand, cand_pad = cand_all, cand_all
             else:
                 d = self._distances(prof, self.centroids)
+                # reprolint: disable=canonical-selection -- probe-cluster ties break toward the lowest cluster id: canonical by construction
                 probe = np.asarray(jax.lax.top_k(-d, n_probe)[1])
                 clusters = np.unique(probe[:nv])
                 cand = np.unique(np.concatenate(
@@ -613,6 +614,7 @@ class ItemClusteredIndex(_SpillClusterCore):
     def _select_shortlist_body(self, num: np.ndarray,
                                m_short: int) -> np.ndarray:
         n_items = self.n_items
+        # reprolint: disable=canonical-selection -- shortlist only (exact rerank follows); cut-value ties get the boundary repair below, same policy as _topm_rows
         sel = np.argpartition(num, n_items - m_short,
                               axis=1)[:, n_items - m_short:]
         selv = np.take_along_axis(num, sel, 1)

@@ -161,6 +161,7 @@ def fused_rerank_scores(q_vals: jnp.ndarray, cand_rows: jnp.ndarray,
 
     out = pl.pallas_call(
         functools.partial(_rerank_kernel, n_k=grid[2], measure=measure,
+                          # reprolint: disable=host-transfer -- beta is a static Python scalar baked into the kernel closure, never traced
                           beta=float(beta)),
         grid=grid,
         in_specs=[

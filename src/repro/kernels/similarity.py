@@ -142,6 +142,7 @@ def fused_similarity(ra: jnp.ndarray, rb: jnp.ndarray, *,
 
     kernel = pl.pallas_call(
         functools.partial(_sim_kernel, n_k=grid[2], measures=measures,
+                          # reprolint: disable=host-transfer -- beta is a static Python scalar baked into the kernel closure, never traced
                           beta=float(beta)),
         grid=grid,
         in_specs=[

@@ -94,7 +94,6 @@ class BatchingServer:
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.topn = topn
-        self.n_batches = 0
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -124,6 +123,12 @@ class BatchingServer:
                               topn=self.topn)
 
     # -- public API --------------------------------------------------------
+    @property
+    def n_batches(self) -> int:
+        """Batches served so far (lock-consistent registry read)."""
+        return int(self.registry.snapshot()["counters"]
+                   .get("serve.batches", 0))
+
     def submit(self, user: int) -> Future:
         fut: Future = Future()
         self._q.put((user, time.perf_counter(), fut))
@@ -160,7 +165,11 @@ class BatchingServer:
             self._run_batch(batch)
 
     def _run_batch(self, batch):
-        self.n_batches += 1
+        # the batch count lives in the registry counter (`serve.batches`),
+        # not a bare attribute: the batcher thread increments while
+        # stats() reads, and the registry lock is what makes that pair
+        # safe (the PR 2 stats() race, now enforced by reprolint's
+        # lock-discipline check)
         self._c_batches.inc()
         self._c_requests.inc(len(batch))
         # depth at launch: what this batch drained plus what is still queued
@@ -205,7 +214,7 @@ class BatchingServer:
         n = lat["count"] if lat else 0
         return {
             "n_requests": n,
-            "n_batches": self.n_batches,
+            "n_batches": int(snap["counters"].get("serve.batches", 0)),
             "latency_p50_ms": (lat["p50"] * 1e3 if n else 0.0),
             "latency_p99_ms": (lat["p99"] * 1e3 if n else 0.0),
             "queue_wait_mean_ms": mean("serve.queue_seconds") * 1e3,

@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 
+from repro import obs
 from repro.distributed import checkpoint as ckpt
 from repro.distributed.fault_tolerance import (FaultInjector, RecoveryPolicy,
                                                StragglerWatchdog)
@@ -90,17 +91,26 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
             step += 1
             if saver and step % cfg.checkpoint_every == 0:
                 saver.save(step, {"params": params, "opt": opt_state})
-        except Exception:
+        except Exception as e:
+            # loud degrade: every failure is recorded before the recovery
+            # path decides anything, so a restart can never be mistaken
+            # for healthy steps in the metrics
+            reg = obs.registry()
+            reg.counter("train.failures").inc()
+            reg.gauge("train.last_failure_step").set(step)
             if saver is None or not policy.should_restart():
                 raise
             saver.wait()
             latest = ckpt.latest_step(cfg.checkpoint_dir)
             if latest is None:
                 raise
-            state = ckpt.restore(cfg.checkpoint_dir, latest,
-                                 {"params": params, "opt": opt_state})
-            params, opt_state = state["params"], state["opt"]
-            step = latest
+            with obs.span("train.recover", step=step, restore_step=latest,
+                          error=type(e).__name__):
+                reg.counter("train.recoveries").inc()
+                state = ckpt.restore(cfg.checkpoint_dir, latest,
+                                     {"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                step = latest
 
     if saver:
         saver.save(cfg.total_steps, {"params": params, "opt": opt_state})

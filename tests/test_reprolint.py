@@ -1,0 +1,422 @@
+"""reprolint seeded-violation suite: every static check fires exactly once
+on its target pattern, stays quiet on the blessed/clean variant, and both
+silencing mechanisms (inline suppression with a reason, reasoned baseline)
+behave per contract.  The last test runs the real gate over src/ — the
+same invocation CI uses — so a regression that would fail CI fails here
+first."""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths
+from repro.analysis import findings as F
+from repro.analysis.linter import main
+
+
+def _lint(tmp_path, source, name="snippet.py", tests_dir=None):
+    f = tmp_path / name
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return analyze_paths([str(f)], tests_dir=tests_dir)
+
+
+def _active(findings, check=None):
+    return [f for f in findings if f.active
+            and (check is None or f.check == check)]
+
+
+# -- check 1: silent-fallback ----------------------------------------------
+
+def test_silent_fallback_fires_on_swallow(tmp_path):
+    fs = _lint(tmp_path, """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+    """)
+    hits = _active(fs, "silent-fallback")
+    assert len(hits) == 1 and hits[0].symbol == "f"
+
+
+def test_silent_fallback_quiet_on_reraise_record_or_kept_exception(tmp_path):
+    fs = _lint(tmp_path, """
+        from repro import obs
+
+        def reraises():
+            try:
+                g()
+            except Exception:
+                cleanup()
+                raise
+
+        def records():
+            try:
+                g()
+            except Exception:
+                obs.registry().counter("f.failures").inc()
+
+        def keeps():
+            try:
+                g()
+            except Exception as e:
+                self.last_error = e
+
+        def narrow():
+            try:
+                import zstandard
+            except ImportError:
+                zstandard = None
+    """)
+    assert _active(fs, "silent-fallback") == []
+
+
+def test_silent_fallback_fires_on_conditional_raise_only(tmp_path):
+    # the PR 8 train_loop shape: a raise exists, but the recovery path
+    # degrades without recording anything
+    fs = _lint(tmp_path, """
+        def run():
+            try:
+                g()
+            except Exception:
+                if hopeless():
+                    raise
+                state = restore()
+    """)
+    assert len(_active(fs, "silent-fallback")) == 1
+
+
+# -- check 2: canonical-selection ------------------------------------------
+
+def test_canonical_selection_fires_on_raw_topk(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def shortlist(s):
+            return jax.lax.top_k(s, 5)
+    """)
+    hits = _active(fs, "canonical-selection")
+    assert len(hits) == 1 and hits[0].symbol == "shortlist"
+
+
+def test_canonical_selection_fires_on_selection_argsort(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def shortlist(s, k):
+            return np.argsort(-s, axis=1)[:, :k]
+    """)
+    assert len(_active(fs, "canonical-selection")) == 1
+
+
+def test_canonical_selection_quiet_in_blessed_scopes(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def _topm_rows(sp, m):
+            return _torch.topk(sp, m)
+
+        def _argpartition_rows(sp, kth):
+            return np.argpartition(sp, kth, axis=1)[:, kth:]
+
+        def grouping(x):
+            return np.argsort(x, kind="stable")   # full permutation: fine
+    """)
+    assert _active(fs, "canonical-selection") == []
+    # the whole select module is blessed
+    fs = _lint(tmp_path / "kernels", """
+        import jax
+
+        def select(s):
+            return jax.lax.top_k(s, 4)
+    """, name="select.py")
+    assert _active(fs, "canonical-selection") == []
+
+
+# -- check 3: kernel-oracle -------------------------------------------------
+
+_KERNEL = """
+    import jax.experimental.pallas as pl
+
+    def _body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def fused_thing(x):
+        return pl.pallas_call(_body, out_shape=x)(x)
+"""
+
+
+def _kernel_tree(tmp_path, *, ref_src, test_src=None):
+    kdir = tmp_path / "kernels"
+    kdir.mkdir(parents=True, exist_ok=True)
+    (kdir / "foo.py").write_text(textwrap.dedent(_KERNEL))
+    (kdir / "ref.py").write_text(textwrap.dedent(ref_src))
+    tdir = tmp_path / "tests"
+    tdir.mkdir(exist_ok=True)
+    if test_src is not None:
+        (tdir / "test_foo.py").write_text(textwrap.dedent(test_src))
+    return analyze_paths([str(kdir)], tests_dir=str(tdir))
+
+
+def test_kernel_oracle_fires_on_missing_oracle(tmp_path):
+    fs = _kernel_tree(tmp_path, ref_src="def other_ref(x):\n    return x\n")
+    hits = _active(fs, "kernel-oracle")
+    assert len(hits) == 1 and "no oracle" in hits[0].message
+
+
+def test_kernel_oracle_fires_on_missing_pairing_test(tmp_path):
+    fs = _kernel_tree(tmp_path, ref_src="def thing_ref(x):\n    return x\n",
+                      test_src="def test_unrelated():\n    pass\n")
+    hits = _active(fs, "kernel-oracle")
+    assert len(hits) == 1 and "no test file" in hits[0].message
+
+
+def test_kernel_oracle_quiet_when_paired_and_tested(tmp_path):
+    fs = _kernel_tree(
+        tmp_path, ref_src="def thing_ref(x):\n    return x\n",
+        test_src="from kernels.foo import fused_thing\n"
+                 "from kernels.ref import thing_ref\n")
+    assert _active(fs, "kernel-oracle") == []
+
+
+# -- check 4: host-transfer -------------------------------------------------
+
+def test_host_transfer_fires_inside_jit(tmp_path):
+    fs = _lint(tmp_path, """
+        import functools
+        import jax
+        import numpy as np
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return np.asarray(x)
+    """)
+    hits = _active(fs, "host-transfer")
+    assert len(hits) == 1 and "np.asarray" in hits[0].message
+
+
+def test_host_transfer_fires_on_item_and_float(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x.sum()) + x.item()
+    """)
+    assert len(_active(fs, "host-transfer")) == 2
+
+
+def test_host_transfer_quiet_outside_jit(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def host_side(x):
+            return float(np.asarray(x).item())
+    """)
+    assert _active(fs, "host-transfer") == []
+
+
+# -- check 5: lock-discipline -----------------------------------------------
+
+def test_lock_discipline_fires_on_mixed_guard(tmp_path):
+    fs = _lint(tmp_path, """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def locked_inc(self):
+                with self._lock:
+                    self.n += 1
+
+            def bare_inc(self):
+                self.n += 1
+    """)
+    hits = _active(fs, "lock-discipline")
+    assert len(hits) == 1 and hits[0].symbol.endswith("S.bare_inc")
+
+
+def test_lock_discipline_fires_on_thread_side_bare_write(tmp_path):
+    # the PR 2 BatchingServer.stats() shape, caught three PRs late by hand
+    fs = _lint(tmp_path, """
+        import threading
+
+        class Server:
+            def __init__(self):
+                self.n_batches = 0
+                self._thread = None
+
+            def start(self):
+                self._thread = threading.Thread(target=self._loop)
+
+            def _loop(self):
+                self._run_batch()
+
+            def _run_batch(self):
+                self.n_batches += 1
+
+            def stats(self):
+                return {"n_batches": self.n_batches}
+    """)
+    hits = _active(fs, "lock-discipline")
+    assert len(hits) == 1 and "n_batches" in hits[0].message
+
+
+def test_lock_discipline_quiet_when_guarded_or_single_sided(tmp_path):
+    fs = _lint(tmp_path, """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+                self._thread = None
+
+            def start(self):
+                self._thread = threading.Thread(target=self._loop)
+
+            def _loop(self):
+                with self._lock:
+                    self.n += 1
+
+            def stats(self):
+                with self._lock:
+                    return self.n
+    """)
+    assert _active(fs, "lock-discipline") == []
+
+
+# -- suppressions -----------------------------------------------------------
+
+def test_suppression_with_reason_is_honored(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def shortlist(s):
+            # reprolint: disable=canonical-selection -- ties provably canonical here
+            return jax.lax.top_k(s, 5)
+    """)
+    assert _active(fs) == []
+    sup = [f for f in fs if f.suppressed]
+    assert len(sup) == 1
+    assert sup[0].suppress_reason == "ties provably canonical here"
+
+
+def test_reasonless_suppression_suppresses_nothing_and_is_a_finding(
+        tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def shortlist(s):
+            # reprolint: disable=canonical-selection
+            return jax.lax.top_k(s, 5)
+    """)
+    checks = sorted(f.check for f in _active(fs))
+    assert checks == ["bad-suppression", "canonical-selection"]
+
+
+def test_suppression_all_and_unknown_check(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def f(s):
+            # reprolint: disable=all -- fixture exercising the catch-all
+            return jax.lax.top_k(s, 5)
+
+        def g(s):
+            # reprolint: disable=no-such-check -- typo
+            return jax.lax.top_k(s, 5)
+    """)
+    active = _active(fs)
+    assert sorted(f.check for f in active) == ["bad-suppression",
+                                               "canonical-selection"]
+    assert any(f.suppressed for f in fs)
+
+
+def test_suppression_in_string_literal_is_not_a_suppression(tmp_path):
+    fs = _lint(tmp_path, '''
+        import jax
+
+        def f(s):
+            doc = "# reprolint: disable=canonical-selection -- not a comment"
+            return jax.lax.top_k(s, 5)
+    ''')
+    assert len(_active(fs, "canonical-selection")) == 1
+
+
+# -- baseline ---------------------------------------------------------------
+
+def test_baseline_matches_by_symbol_and_reports_stale(tmp_path):
+    snippet = tmp_path / "mod.py"
+    snippet.write_text(textwrap.dedent("""
+        import jax
+
+        def shortlist(s):
+            return jax.lax.top_k(s, 5)
+    """))
+    fs = analyze_paths([str(snippet)], tests_dir=None)
+    baseline = {
+        ("canonical-selection", str(snippet), "shortlist"): "legacy",
+        ("canonical-selection", str(snippet), "gone"): "stale entry",
+    }
+    stale = F.apply_baseline(fs, baseline)
+    assert _active(fs) == []
+    assert [f for f in fs if f.baselined][0].symbol == "shortlist"
+    assert stale == [("canonical-selection", str(snippet), "gone")]
+
+
+def test_baseline_entry_without_reason_is_rejected(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"check": "canonical-selection", "path": "x.py", "symbol": "f",
+         "reason": ""}]}))
+    with pytest.raises(ValueError, match="reason"):
+        F.load_baseline(p)
+
+
+def test_cli_gate_and_json_report(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\ndef f(s):\n    return jax.lax.top_k(s, 5)\n")
+    report = tmp_path / "findings.json"
+    rc = main([str(bad), "--no-baseline", "--json", str(report),
+               "--tests-dir", ""])
+    assert rc == 1
+    data = json.loads(report.read_text())
+    assert data["schema"] == "repro.analysis.findings/v1"
+    assert data["n_active"] == 1
+    assert data["findings"][0]["check"] == "canonical-selection"
+
+    ok = tmp_path / "ok.py"
+    ok.write_text("def f():\n    return 1\n")
+    assert main([str(ok), "--no-baseline", "--tests-dir", ""]) == 0
+
+
+# -- the real gate ----------------------------------------------------------
+
+def test_repo_gate_is_clean(monkeypatch):
+    """`python -m repro.analysis src/` exits clean: every finding in the
+    tree is suppressed with a reason or carried by the committed
+    baseline — the exact CI invocation."""
+    repo = Path(__file__).resolve().parent.parent
+    monkeypatch.chdir(repo)
+    rc = main(["src", "--json", str(repo / "reprolint_findings.json")])
+    (repo / "reprolint_findings.json").unlink(missing_ok=True)
+    assert rc == 0
+
+
+def test_repo_gate_catches_a_seeded_regression(tmp_path, monkeypatch):
+    """Dropping a fresh violation into the scanned tree flips the gate."""
+    repo = Path(__file__).resolve().parent.parent
+    monkeypatch.chdir(repo)
+    import shutil
+    victim = tmp_path / "srccopy"
+    shutil.copytree(repo / "src" / "repro" / "analysis", victim)
+    (victim / "seeded.py").write_text(
+        "def f():\n    try:\n        g()\n    except Exception:\n"
+        "        pass\n")
+    assert main([str(victim)]) == 1
