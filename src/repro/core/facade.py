@@ -314,6 +314,12 @@ class CFEngine:
         self.ratings_version = 0
         self.fit_seconds = 0.0
         self.last_update: Optional[UpdateStats] = None
+        # chaos hook: a FaultInjector armed here fires inside
+        # update_ratings after the ratings mutation but before any derived
+        # state is repaired — the torn-engine drill (see bench_chaos);
+        # None in production
+        self.fault_injector = None
+        self._update_seq = 0
 
     # -- properties --------------------------------------------------------
     @property
@@ -460,6 +466,19 @@ class CFEngine:
                                        jnp.asarray(item_ids)].set(
                                            jnp.asarray(values))
         self.ratings_version += 1
+        self._update_seq += 1
+        if self.fault_injector is not None:
+            # chaos hook: the ratings array has been swapped and the
+            # version bumped, but stats/caches/snapshot are all stale —
+            # exactly the torn state a recovery must repair.  The failure
+            # is recorded before the raise (concurrent readers keep the
+            # previous snapshot: it is only republished at the end of a
+            # successful update).
+            try:
+                self.fault_injector.check(self._update_seq)
+            except Exception:
+                obs.registry().counter("engine.update.failures").inc()
+                raise
 
         # 1. refold the touched rows' sufficient statistics
         s_pad = _bucket(len(touched), self.n_users)
@@ -632,6 +651,79 @@ class CFEngine:
             raise RuntimeError("call fit() first")
         return self.scores, self.idx
 
+    # -- persistence -------------------------------------------------------
+    def state(self) -> dict:
+        """Checkpointable engine state as a pytree of host arrays, shaped
+        for ``repro.distributed.checkpoint.save`` — the recovery path the
+        chaos drills exercise: save after each committed update, and a
+        fault that tears the model mid-update restores the last committed
+        tree with :meth:`load_state`.
+
+        Every leaf is a fresh host copy (the index cores hand out live
+        ledger references), so a captured tree can never alias state a
+        later update mutates in place.  Derived caches (gather operand,
+        CSR/pair/support tables) are deliberately absent: they are keyed
+        by ratings-array identity and rebuild lazily after a restore.
+        """
+        if not self.fitted:
+            raise RuntimeError("call fit() first")
+        copy = functools.partial(jax.tree_util.tree_map,
+                                 lambda x: np.array(x))
+        return {
+            "ratings": np.array(self.ratings),
+            "scores": np.array(self.scores),
+            "idx": np.array(self.idx),
+            "means": np.array(self.means),
+            "cnt": np.array(self._cnt),
+            "tot": np.array(self._tot),
+            "meta": np.asarray([self.ratings_version], np.int64),
+            # a fitted engine implies fitted indexes (fit() fits both), so
+            # presence alone decides the tree structure — state_template()
+            # must mirror it exactly for checkpoint.restore(like=...)
+            "index": copy(self.index.state())
+            if self.index is not None else {},
+            "item_index": copy(self.item_index.state())
+            if self.item_index is not None else {},
+        }
+
+    def state_template(self) -> dict:
+        """Structure-only tree for ``checkpoint.restore(..., like=...)``,
+        mirroring this engine's configuration (leaf values are ignored —
+        shapes come from the checkpoint shards)."""
+        out = {k: 0 for k in ("ratings", "scores", "idx", "means",
+                              "cnt", "tot", "meta")}
+        out["index"] = (type(self.index).state_template()
+                        if self.index is not None else {})
+        out["item_index"] = (type(self.item_index).state_template()
+                             if self.item_index is not None else {})
+        return out
+
+    def load_state(self, tree: dict) -> "CFEngine":
+        """Restore a :meth:`state` tree (typically from
+        ``checkpoint.restore``): model arrays, sufficient statistics, and
+        index state return to the committed point, derived caches drop
+        (identity-keyed, so they rebuild lazily and can never serve the
+        torn model), and the snapshot is republished atomically — a
+        concurrent reader flips to the restored model in one reference
+        swap, exactly like a successful update."""
+        self.ratings = jnp.asarray(np.asarray(tree["ratings"], np.float32))
+        scores = jnp.asarray(np.asarray(tree["scores"], np.float32))
+        self.idx = jnp.asarray(np.asarray(tree["idx"], np.int32))
+        self.means = jnp.asarray(np.asarray(tree["means"], np.float32))
+        self._cnt = jnp.asarray(np.asarray(tree["cnt"]))
+        self._tot = jnp.asarray(np.asarray(tree["tot"]))
+        self.ratings_version = int(np.asarray(tree["meta"]).reshape(-1)[0])
+        self._gather_cache = None
+        if self.index is not None and tree.get("index"):
+            self.index.load_state(tree["index"])
+        if self.item_index is not None and tree.get("item_index"):
+            self.item_index.load_state(tree["item_index"])
+        self.scores = jax.block_until_ready(scores)
+        self._snapshot = (self.ratings, self.scores, self.idx, self.means)
+        obs.registry().gauge("engine.ratings_version").set(
+            self.ratings_version)
+        return self
+
     def _gather_source(self, ratings):
         """int8 gather operand for the recommend/predict gathers when the
         matrix round-trips exactly (cached per ratings array — a rating
@@ -674,12 +766,19 @@ class CFEngine:
             gather_src=self._gather_source(ratings))
 
     def recommend(self, user_ids=None, n: int = 10, *,
-                  mode: Optional[str] = None
+                  mode: Optional[str] = None,
+                  n_probe: Optional[int] = None,
+                  shortlist: Optional[int] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Top-n unseen items ``(scores, item ids)`` for ``user_ids``.
 
         ``mode`` overrides the engine's ``recommend_mode`` per call
-        (``"approx"`` requires a fitted item index).  The exact path
+        (``"approx"`` requires a fitted item index).  ``n_probe`` and
+        ``shortlist`` are per-call candidate budgets forwarded to the
+        item index (approx mode only — the exact path has no candidate
+        stage, so passing them there raises instead of silently ignoring
+        a quality knob).  The serving degradation ladder uses them to
+        trade recall for latency per request class.  The exact path
         streams user blocks × item tiles — peak memory O(UB·k·IB); the
         approx path runs the two-stage item-index pipeline and returns
         exact predicted ratings for an approximate candidate set.  Slots a
@@ -714,13 +813,19 @@ class CFEngine:
                     and len(uids) > 4096:
                 perm = np.argsort(self.index.assign[uids], kind="stable")
                 s, i = self.item_index.recommend(
-                    ratings, means, scores, idx, uids[perm], n=n)
+                    ratings, means, scores, idx, uids[perm], n=n,
+                    n_probe=n_probe, shortlist=shortlist)
                 inv = np.empty_like(perm)
                 inv[perm] = np.arange(len(perm))
                 return s[jnp.asarray(inv)], i[jnp.asarray(inv)]
             return self.item_index.recommend(
-                ratings, means, scores, idx, uids, n=n)
+                ratings, means, scores, idx, uids, n=n,
+                n_probe=n_probe, shortlist=shortlist)
 
+        if n_probe is not None or shortlist is not None:
+            raise ValueError(
+                "n_probe/shortlist are approx-mode candidate budgets; the "
+                "exact path scores every item and cannot honor them")
         src = self._gather_source(ratings)
         out_s = np.empty((len(uids), n), np.float32)
         out_i = np.empty((len(uids), n), np.int32)

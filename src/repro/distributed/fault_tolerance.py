@@ -21,8 +21,19 @@ import time
 from typing import Callable, List, Optional
 
 
-class InjectedFault(RuntimeError):
-    """Deterministic stand-in for a device/host failure."""
+class TransientServeError(RuntimeError):
+    """A failure the caller may retry: the operation left no partial
+    state behind (or the state is repaired by re-running), so a bounded
+    retry with backoff is safe.  The serving batcher retries these;
+    anything else fails the batch immediately."""
+
+
+class InjectedFault(TransientServeError):
+    """Deterministic stand-in for a device/host failure.
+
+    Transient by construction: :class:`FaultInjector` fires each
+    configured step exactly once, so the retry after the fault passes —
+    which is what makes recovery drills deterministic."""
 
 
 @dataclasses.dataclass
@@ -70,11 +81,51 @@ class StragglerWatchdog:
 
 @dataclasses.dataclass
 class RecoveryPolicy:
-    """How the loop responds to a failure."""
+    """How a supervised loop responds to failures.
+
+    Counting is split from querying: ``record_failure()`` tallies every
+    failure, ``can_restart`` is a pure probe of the remaining restart
+    budget, and ``record_restart()`` consumes one unit when the caller
+    actually restarts.  (The old ``should_restart()`` fused probe and
+    consume, so a probe-then-act caller double-counted its budget.)
+
+    ``backoff_s(attempt)`` is the bounded exponential retry delay the
+    serving tier sleeps between attempts — attempt 0 waits
+    ``backoff_base_s``, each further attempt multiplies by
+    ``backoff_factor``, capped at ``backoff_max_s``.
+    """
     max_restarts: int = 3
     on_restore: Optional[Callable[[int], None]] = None
     restarts: int = 0
+    failures: int = 0
+    backoff_base_s: float = 0.005
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 0.5
+
+    def record_failure(self) -> None:
+        """Tally a failure (every failure, restartable or not)."""
+        self.failures += 1
+
+    @property
+    def can_restart(self) -> bool:
+        """Pure probe: restart budget remains.  Mutates nothing."""
+        return self.restarts < self.max_restarts
+
+    def record_restart(self) -> None:
+        """Consume one restart from the budget (call when restarting)."""
+        self.restarts += 1
+
+    def backoff_s(self, attempt: int = 0) -> float:
+        """Retry delay before attempt ``attempt + 1`` (0-indexed)."""
+        return min(self.backoff_base_s * self.backoff_factor ** max(attempt, 0),
+                   self.backoff_max_s)
 
     def should_restart(self) -> bool:
-        self.restarts += 1
-        return self.restarts <= self.max_restarts
+        """Deprecated fused probe-and-consume (legacy callers only):
+        records the failure and, if budget remains, consumes a restart.
+        Return values match the old per-call increment semantics."""
+        self.record_failure()
+        if not self.can_restart:
+            return False
+        self.record_restart()
+        return True

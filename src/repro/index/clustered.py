@@ -832,6 +832,11 @@ class _SpillClusterCore:
         self._ratings_key = None          # the array the caches track
         self._ratings_version = 0         # bumped by every refold
         self._member_table_cache = None   # padded per-cluster scan tables
+        # chaos hooks: a FaultInjector armed here fires mid-refold (after
+        # ledger mass is removed, before it is re-added) — the torn-index
+        # case the checkpoint-restore drill recovers from
+        self.fault_injector = None
+        self._refold_seq = 0
 
     def _ratings_csr(self, ratings):
         """Host CSR view of the rating matrix (indptr, indices, data) —
@@ -1127,6 +1132,12 @@ class _SpillClusterCore:
         a_old = self.assign[touched].copy()
         np.add.at(self._sums, a_old, -p_old)
         np.add.at(self._counts, a_old, -1)
+        self._refold_seq += 1
+        if self.fault_injector is not None:
+            # chaos hook: fire with the ledger genuinely torn — touched
+            # rows' mass removed but not yet re-added, so check_consistent
+            # fails until the caller restores a committed checkpoint
+            self.fault_injector.check(self._refold_seq)
         d_new = np.asarray(self._distances(p_new_j, self.centroids))
         a_prov = d_new.argmin(axis=1).astype(np.int32)
         np.add.at(self._sums, a_prov, p_new)
@@ -1321,6 +1332,11 @@ class ClusteredIndex(_SpillClusterCore):
                  mesh_axis: str = "data"):
         super().__init__(cfg, mesh=mesh, mesh_axis=mesh_axis)
         self.last_query: Optional[QueryStats] = None
+        # per-index runtime override of the frozen cfg.query_mode: the
+        # serving degradation ladder steps fused→staged under pressure
+        # (and back) without rebuilding the index around a new config;
+        # None defers to cfg resolution
+        self.query_mode_override: Optional[str] = None
 
     @property
     def n_users(self) -> int:
@@ -1390,7 +1406,18 @@ class ClusteredIndex(_SpillClusterCore):
         the staged host pipeline elsewhere.  The fused chain is correct
         everywhere (its stages fall back to jitted XLA twins off-TPU),
         but the staged host BLAS + bucketed gather walk is faster at CPU
-        memory bandwidth — only the device backend flips the default."""
+        memory bandwidth — only the device backend flips the default.
+
+        ``query_mode_override`` (set by the serving degradation ladder)
+        wins over everything: a degraded server must be able to force the
+        cheaper staged pipeline per transition, not per rebuild."""
+        override = self.query_mode_override
+        if override is not None:
+            if override not in ("fused", "staged"):
+                raise ValueError(
+                    f"query_mode_override must be 'fused' or 'staged', "
+                    f"got {override!r}")
+            return override
         if self.cfg.query_mode != "auto":
             return self.cfg.query_mode
         return "fused" if self._use_kernel() else "staged"

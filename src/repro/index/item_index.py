@@ -407,7 +407,8 @@ class ItemClusteredIndex(_SpillClusterCore):
     def recommend(self, ratings: jnp.ndarray, means: jnp.ndarray,
                   nb_scores: jnp.ndarray, nb_idx: jnp.ndarray,
                   user_ids=None, *, n: int = 10,
-                  n_probe: Optional[int] = None
+                  n_probe: Optional[int] = None,
+                  shortlist: Optional[int] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Top-n unseen items through the two-stage pipeline.
 
@@ -416,6 +417,11 @@ class ItemClusteredIndex(_SpillClusterCore):
         similarities).  Returns ``(scores, item_ids)`` of shape
         ``(len(user_ids), n)`` with exact predicted ratings as scores and
         -1 for slots a user cannot fill; sets ``self.last_recommend``.
+
+        ``n_probe``/``shortlist`` override the config budgets for this
+        call only — the serving degradation ladder trades candidate-set
+        size for latency per request class without touching the frozen
+        config other callers resolve.
         """
         if not self.fitted:
             raise RuntimeError("call fit() first")
@@ -426,7 +432,8 @@ class ItemClusteredIndex(_SpillClusterCore):
             return (jnp.zeros((0, n), jnp.float32),
                     jnp.full((0, n), -1, jnp.int32))
         n_probe = min(n_probe or self.n_probe, self.n_clusters)
-        shortlist = self.cfg.shortlist
+        shortlist = self.cfg.shortlist if shortlist is None \
+            else max(int(shortlist), n)
         s_mode = self._shortlist_mode()
         if s_mode == "kernel" and jax.default_backend() != "tpu" \
                 and not self.cfg.interpret:
@@ -440,13 +447,15 @@ class ItemClusteredIndex(_SpillClusterCore):
                           n=n, scorer=s_mode) as sp:
                 out = self._recommend_support(ratings, means, nb_scores,
                                               nb_idx, uids, n=n,
-                                              scorer=s_mode)
+                                              scorer=s_mode,
+                                              shortlist=shortlist)
             self._obs_recommend(sp)
             return out
         with obs.span("item_index.recommend", n_queries=len(uids), n=n,
                       scorer="proxy") as sp:
             out = self._recommend_proxy(ratings, means, nb_scores, nb_idx,
-                                        uids, n=n, n_probe=n_probe)
+                                        uids, n=n, n_probe=n_probe,
+                                        shortlist=shortlist)
         self._obs_recommend(sp)
         return out
 
@@ -460,11 +469,13 @@ class ItemClusteredIndex(_SpillClusterCore):
         reg.histogram("item_index.recommend.seconds").observe(sp.duration)
 
     def _recommend_proxy(self, ratings, means, nb_scores, nb_idx,
-                         uids: np.ndarray, *, n: int, n_probe: int):
+                         uids: np.ndarray, *, n: int, n_probe: int,
+                         shortlist: Optional[int] = None):
         """The dense proxy-scorer path: probe item clusters near each
         query block's taste profile, proxy-shortlist, exact rerank (the
         non-support fallback of :meth:`recommend`)."""
-        shortlist = self.cfg.shortlist
+        if shortlist is None:
+            shortlist = self.cfg.shortlist
         gather_src = self._gather_source(ratings)
         bq = min(self.cfg.query_block, _bucket(len(uids)))
         out_s = np.empty((len(uids), n), np.float32)
@@ -635,7 +646,8 @@ class ItemClusteredIndex(_SpillClusterCore):
 
     def _recommend_support(self, ratings, means, nb_scores, nb_idx,
                            uids: np.ndarray, *, n: int,
-                           scorer: str = "support"):
+                           scorer: str = "support",
+                           shortlist: Optional[int] = None):
         """Support-scorer path: every item scored with the exact num/den
         predictor form, the canonical top ``shortlist`` unseen items per
         user go to the exact rerank.
@@ -654,7 +666,8 @@ class ItemClusteredIndex(_SpillClusterCore):
         stacked = (self._support_table(ratings, means)
                    if scorer == "support" else None)
         n_items = self.n_items
-        m_short = min(max(n, self.cfg.shortlist), n_items)
+        m_short = min(max(n, self.cfg.shortlist if shortlist is None
+                          else shortlist), n_items)
         gather_src = self._gather_source(ratings)
         rnp = np.asarray(ratings)
         means_np = np.asarray(means)
@@ -919,16 +932,20 @@ class ItemClusteredIndex(_SpillClusterCore):
     def _extra_state(self) -> dict:
         return {
             "has_pos": np.asarray(self._has_pos),
-            "item_meta": np.asarray([self.n_users], np.int64),
+            "item_meta": np.asarray([self.n_users,
+                                     self._touched_since_profile], np.int64),
             "profiles": np.asarray(self.profiles),
         }
 
     def _load_extra_state(self, tree: dict) -> None:
-        self.n_users = int(np.asarray(tree["item_meta"]).reshape(-1)[0])
+        meta = np.asarray(tree["item_meta"]).reshape(-1)
+        self.n_users = int(meta[0])
         self.profiles = jnp.asarray(
             np.asarray(tree["profiles"], np.float32))
         self._has_pos = jnp.asarray(np.asarray(tree["has_pos"]).astype(bool))
         # the scorer operands are derived data: rebuilt lazily per ratings
         self._support_cache = None
         self._support_dense_cache = None
-        self._touched_since_profile = 0
+        # profile-refold drift restored exactly (older checkpoints carry
+        # only n_users; they predate the counter and start it at 0)
+        self._touched_since_profile = int(meta[1]) if meta.size > 1 else 0

@@ -9,6 +9,15 @@ registry here (so index/engine metrics and serving metrics land in one
 dump); ``--stats-interval`` logs a periodic ``stats()`` line while the
 run is in flight and ``--metrics-dump PATH`` writes the final registry
 snapshot as the flat JSON metrics artifact.
+
+Fault tolerance (README § Fault tolerance & graceful degradation):
+``--deadline-ms`` / ``--max-queue`` exercise the request lifecycle,
+``--ladder`` enables the degradation state machine, and
+``--chaos-at-batch N`` injects a transient fault at batch N so the
+supervised retry shows up in the stats line::
+
+    PYTHONPATH=src python -m repro.launch.serve --engine facade \\
+        --max-queue 64 --deadline-ms 200 --ladder --chaos-at-batch 2
 """
 
 from __future__ import annotations
@@ -28,12 +37,18 @@ from repro.serving.engine import BatchingServer
 
 def _stats_line(server: BatchingServer) -> str:
     s = server.stats()
-    return (f"requests={s['n_requests']} batches={s['n_batches']} "
+    line = (f"requests={s['n_requests']} batches={s['n_batches']} "
             f"p50={s['latency_p50_ms']:.1f}ms p99={s['latency_p99_ms']:.1f}ms "
             f"queue={s['queue_wait_mean_ms']:.1f}ms "
             f"compute={s['compute_mean_ms']:.1f}ms "
             f"fill={s['mean_batch_fill']:.2f} "
-            f"depth={s['mean_queue_depth']:.1f}")
+            f"depth={s['mean_queue_depth']:.1f} "
+            f"health={s['health']}")
+    if s["n_failures"] or s["n_shed"] or s["n_deadline_exceeded"]:
+        line += (f" failures={s['n_failures']} retries={s['n_retries']} "
+                 f"recoveries={s['n_recoveries']} shed={s['n_shed']} "
+                 f"deadline={s['n_deadline_exceeded']}")
+    return line
 
 
 def main():
@@ -57,7 +72,35 @@ def main():
     ap.add_argument("--metrics-dump", default=None,
                     help="write the final metrics-registry snapshot "
                          "(fit + serving) to this JSON path")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; expired-in-queue requests "
+                         "resolve with DeadlineExceeded (0 disables)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission bound: submits past it shed with "
+                         "Overloaded (0 = unbounded)")
+    ap.add_argument("--ladder", action="store_true",
+                    help="enable the HEALTHY/DEGRADED/SHEDDING "
+                         "degradation ladder")
+    ap.add_argument("--degrade-p99-ms", type=float, default=50.0)
+    ap.add_argument("--shed-p99-ms", type=float, default=200.0)
+    ap.add_argument("--chaos-at-batch", type=int, default=0,
+                    help="inject a transient fault at this batch number "
+                         "(0 disables) — exercises the supervised retry")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="retry budget per faulted batch")
     args = ap.parse_args()
+
+    from repro.distributed.fault_tolerance import (FaultInjector,
+                                                   RecoveryPolicy)
+    from repro.serving.engine import DegradationLadder
+    ft_kw = dict(
+        max_queue=args.max_queue,
+        recovery=RecoveryPolicy(max_restarts=args.max_restarts),
+        fault_injector=(FaultInjector(fail_at_steps=(args.chaos_at_batch,))
+                        if args.chaos_at_batch > 0 else None),
+        ladder=(DegradationLadder(degrade_p99_ms=args.degrade_p99_ms,
+                                  shed_p99_ms=args.shed_p99_ms)
+                if args.ladder else None))
 
     train, _, _ = load_ml1m_synthetic(n_users=args.users,
                                       n_items=args.items)
@@ -67,13 +110,15 @@ def main():
         engine = CFEngine(tr, measure=args.measure, k=40, block_size=256,
                           recommend_mode=args.recommend_mode).fit()
         server = BatchingServer(engine, max_batch=args.max_batch,
-                                topn=args.topn, registry=obs.registry())
+                                topn=args.topn, registry=obs.registry(),
+                                **ft_kw)
     else:
         cf = UserCF(CFConfig(measure=args.measure, top_k=40,
                              block_size=256))
         cf.fit(tr)
         server = BatchingServer(cf, tr, max_batch=args.max_batch,
-                                topn=args.topn, registry=obs.registry())
+                                topn=args.topn, registry=obs.registry(),
+                                **ft_kw)
     server.start()
 
     stop_log = threading.Event()
@@ -83,14 +128,28 @@ def main():
                 print(f"[stats] {_stats_line(server)}", flush=True)
         threading.Thread(target=logger, daemon=True).start()
 
+    from repro.serving.engine import DeadlineExceeded, Overloaded
     t0 = time.perf_counter()
-    futs = [server.submit(int(u)) for u in
-            np.random.default_rng(0).integers(0, args.users, args.requests)]
-    res = [f.result(timeout=120) for f in futs]
+    deadline = args.deadline_ms if args.deadline_ms > 0 else None
+    futs, shed = [], 0
+    for u in np.random.default_rng(0).integers(0, args.users,
+                                               args.requests):
+        try:
+            futs.append(server.submit(int(u), deadline_ms=deadline))
+        except Overloaded:
+            shed += 1
+    res, expired = [], 0
+    for f in futs:
+        try:
+            res.append(f.result(timeout=120))
+        except DeadlineExceeded:
+            expired += 1
     dt = time.perf_counter() - t0
     stop_log.set()
     server.stop()
-    print(f"{len(res)} requests, {len(res) / dt:.0f} req/s, "
+    extra = (f", {shed} shed, {expired} expired"
+             if shed or expired else "")
+    print(f"{len(res)} requests{extra}, {len(res) / dt:.0f} req/s, "
           f"{_stats_line(server)}")
     if args.metrics_dump:
         obs.export_metrics(args.metrics_dump)

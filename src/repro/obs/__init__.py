@@ -21,7 +21,8 @@ The metric-name inventory lives in README.md § Observability.
 from repro.obs.export import (chrome_trace_events, export_chrome_trace,
                               export_metrics)
 from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
-                               MetricsRegistry, registry)
+                               MetricsRegistry, delta_counts, delta_mean,
+                               delta_quantile, registry)
 from repro.obs.trace import (Span, SpanRecord, clear, current_span, disable,
                              dropped_spans, enable, get_spans, is_enabled,
                              set_capacity, span, traced)
@@ -51,7 +52,8 @@ def reset_metrics() -> None:
 __all__ = [
     "Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "MetricsRegistry",
     "Span", "SpanRecord", "chrome_trace_events", "clear", "counter",
-    "current_span", "disable", "dropped_spans", "enable",
+    "current_span", "delta_counts", "delta_mean", "delta_quantile",
+    "disable", "dropped_spans", "enable",
     "export_chrome_trace", "export_metrics", "gauge", "get_spans",
     "histogram", "is_enabled", "registry", "reset_metrics", "set_capacity",
     "span", "traced",

@@ -152,6 +152,65 @@ class Histogram:
         }
 
 
+def delta_counts(prev: Optional[dict], cur: dict) -> Dict[int, int]:
+    """Per-bucket observation counts that landed *between* two histogram
+    snapshots (``Histogram._snap()`` dicts from ``registry.snapshot()``),
+    keyed by absolute ladder index.  ``prev=None`` means "since birth"."""
+    out: Dict[int, int] = {}
+    for i, c in enumerate(cur["counts"]):
+        if c:
+            out[cur["bucket_lo"] + i] = c
+    if prev is not None:
+        for i, c in enumerate(prev["counts"]):
+            if c:
+                j = prev["bucket_lo"] + i
+                out[j] = out.get(j, 0) - c
+                if out[j] == 0:
+                    del out[j]
+    return out
+
+
+def delta_quantile(prev: Optional[dict], cur: dict, q: float) -> float:
+    """Windowed quantile between two cumulative histogram snapshots.
+
+    Histograms are cumulative for the life of the process, which makes
+    lifetime percentiles useless for *health* decisions — one slow warmup
+    batch would keep p99 pinned high forever.  Bucket counts subtract
+    cleanly, so the serving ladder snapshots the registry each window and
+    reads the quantile of just the observations in between.  Same
+    upper-bound convention as :meth:`Histogram.quantile`; observations in
+    the overflow bucket report the *cumulative* max (the per-window max
+    is not recoverable from counts alone — an acceptable overestimate for
+    a degrade-on-slow decision).  Returns 0.0 for an empty window.
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"need 0 < q <= 1, got {q}")
+    win = delta_counts(prev, cur)
+    n = sum(win.values())
+    if n <= 0:
+        return 0.0
+    rank = max(math.ceil(q * n), 1)
+    seen = 0
+    bounds = cur.get("bounds", [])
+    lo = cur["bucket_lo"]
+    for i in sorted(win):
+        seen += win[i]
+        if seen >= rank:
+            # a bucket with window mass is populated in cur, so its bound
+            # is inside cur's sparse segment; None marks overflow
+            b = bounds[i - lo] if 0 <= i - lo < len(bounds) else None
+            return cur["max"] if b is None else b
+    return cur["max"]  # pragma: no cover - counts always sum to n
+
+
+def delta_mean(prev: Optional[dict], cur: dict) -> float:
+    """Mean of the observations between two snapshots (0.0 if none)."""
+    n = cur["count"] - (prev["count"] if prev else 0)
+    if n <= 0:
+        return 0.0
+    return (cur["sum"] - (prev["sum"] if prev else 0.0)) / n
+
+
 class MetricsRegistry:
     """Name → instrument map; one lock guards maps and instrument state."""
 

@@ -98,7 +98,11 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
             reg = obs.registry()
             reg.counter("train.failures").inc()
             reg.gauge("train.last_failure_step").set(step)
-            if saver is None or not policy.should_restart():
+            # probe-then-act without double-counting: record_failure()
+            # tallies, can_restart only reads the budget, and the restart
+            # is consumed exactly once where the restore actually happens
+            policy.record_failure()
+            if saver is None or not policy.can_restart:
                 raise
             saver.wait()
             latest = ckpt.latest_step(cfg.checkpoint_dir)
@@ -107,6 +111,7 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
             with obs.span("train.recover", step=step, restore_step=latest,
                           error=type(e).__name__):
                 reg.counter("train.recoveries").inc()
+                policy.record_restart()
                 state = ckpt.restore(cfg.checkpoint_dir, latest,
                                      {"params": params, "opt": opt_state})
                 params, opt_state = state["params"], state["opt"]
@@ -115,8 +120,7 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
     if saver:
         saver.save(cfg.total_steps, {"params": params, "opt": opt_state})
         saver.wait()
-    return TrainResult(losses=losses, restarts=policy.restarts - 1
-                       if policy.restarts else 0,
+    return TrainResult(losses=losses, restarts=policy.restarts,
                        straggler_steps=watchdog.flagged_steps,
                        final_step=step, params=params, opt_state=opt_state)
 

@@ -1,0 +1,128 @@
+"""Direct coverage for the fault-tolerance substrate: FaultInjector
+one-shot semantics, StragglerWatchdog EWMA/grace/escalation edges, and
+the RecoveryPolicy probe/act split with bounded backoff."""
+
+import pytest
+
+from repro.distributed.fault_tolerance import (FaultInjector, InjectedFault,
+                                               RecoveryPolicy,
+                                               StragglerWatchdog,
+                                               TransientServeError)
+
+
+# -- FaultInjector -----------------------------------------------------------
+
+def test_injector_fires_each_step_exactly_once():
+    inj = FaultInjector(fail_at_steps=(3, 5))
+    inj.check(1)
+    inj.check(2)
+    with pytest.raises(InjectedFault, match="step 3"):
+        inj.check(3)
+    # one-shot: the retry of the same step passes — deterministic recovery
+    inj.check(3)
+    with pytest.raises(InjectedFault):
+        inj.check(5)
+    inj.check(5)
+    assert inj.fired == {3, 5}
+
+
+def test_injector_is_transient_by_construction():
+    # the serving retry path keys on this subtyping: injected faults must
+    # be retried, not treated as terminal
+    assert issubclass(InjectedFault, TransientServeError)
+    assert issubclass(TransientServeError, RuntimeError)
+
+
+def test_injector_ignores_unlisted_steps():
+    inj = FaultInjector(fail_at_steps=())
+    for s in range(10):
+        inj.check(s)
+    assert inj.fired == set()
+
+
+# -- StragglerWatchdog -------------------------------------------------------
+
+def test_watchdog_first_observation_seeds_ewma():
+    wd = StragglerWatchdog()
+    assert wd.observe(0, 10.0) is False   # no baseline yet → never slow
+    assert wd.ewma == 10.0
+
+
+def test_watchdog_grace_steps_never_flag():
+    wd = StragglerWatchdog(grace_steps=5)
+    wd.observe(0, 1.0)
+    # 10× the mean, but still inside the grace window (compilation,
+    # cache warmup): not a straggler
+    assert wd.observe(4, 10.0) is False
+    assert wd.flagged_steps == []
+
+
+def test_watchdog_flags_outlier_after_grace():
+    wd = StragglerWatchdog(alpha=0.1, threshold=2.0, grace_steps=5)
+    for s in range(5):
+        wd.observe(s, 1.0)
+    ewma_before = wd.ewma
+    assert wd.observe(5, 2.5 * ewma_before) is True
+    assert wd.flagged_steps == [5]
+    # EWMA folds the slow step in *after* the comparison
+    assert wd.ewma == pytest.approx(0.9 * ewma_before
+                                    + 0.1 * 2.5 * ewma_before)
+
+
+def test_watchdog_escalates_on_three_consecutive():
+    wd = StragglerWatchdog(alpha=0.0, threshold=2.0, grace_steps=0)
+    wd.observe(0, 1.0)   # seed; alpha=0 pins the EWMA at 1.0
+    for s in (1, 2):
+        assert wd.observe(s, 3.0) is True
+        assert not wd.needs_escalation
+    assert wd.observe(3, 3.0) is True
+    assert wd.needs_escalation
+
+
+def test_watchdog_fast_step_resets_consecutive():
+    wd = StragglerWatchdog(alpha=0.0, threshold=2.0, grace_steps=0)
+    wd.observe(0, 1.0)
+    wd.observe(1, 3.0)
+    wd.observe(2, 3.0)
+    assert wd.consecutive == 2
+    wd.observe(3, 1.0)    # healthy step breaks the run
+    assert wd.consecutive == 0 and not wd.needs_escalation
+    assert wd.flagged_steps == [1, 2]
+
+
+# -- RecoveryPolicy ----------------------------------------------------------
+
+def test_policy_probe_is_pure():
+    p = RecoveryPolicy(max_restarts=2)
+    # the old should_restart() consumed budget on every probe; the split
+    # API must not — probing twice costs nothing
+    assert p.can_restart and p.can_restart
+    assert p.restarts == 0 and p.failures == 0
+
+
+def test_policy_failures_and_restarts_count_independently():
+    p = RecoveryPolicy(max_restarts=1)
+    p.record_failure()
+    p.record_failure()
+    assert p.failures == 2 and p.restarts == 0
+    assert p.can_restart
+    p.record_restart()
+    assert p.restarts == 1 and not p.can_restart
+
+
+def test_policy_backoff_is_bounded_exponential():
+    p = RecoveryPolicy(backoff_base_s=0.01, backoff_factor=2.0,
+                       backoff_max_s=0.05)
+    assert p.backoff_s(0) == pytest.approx(0.01)
+    assert p.backoff_s(1) == pytest.approx(0.02)
+    assert p.backoff_s(2) == pytest.approx(0.04)
+    assert p.backoff_s(3) == pytest.approx(0.05)   # capped
+    assert p.backoff_s(50) == pytest.approx(0.05)
+    assert p.backoff_s(-1) == pytest.approx(0.01)  # clamped, not 1/factor
+
+
+def test_legacy_should_restart_keeps_old_semantics():
+    p = RecoveryPolicy(max_restarts=2)
+    assert p.should_restart() and p.should_restart()
+    assert not p.should_restart()
+    assert p.failures == 3 and p.restarts == 2

@@ -346,3 +346,69 @@ def test_query_metrics_land_in_registry(rng):
     assert h["count"] == 1
     # histogram percentile within one bucket ratio of the measured wall
     assert st.seconds_total <= h["p50"] <= st.seconds_total * 10 ** 0.1
+
+
+# -- windowed deltas (serving health windows) -------------------------------
+
+def _hist_snaps(obs_values_1, obs_values_2, buckets=(1.0, 10.0, 100.0)):
+    """Two cumulative snapshots of one histogram: after the first batch
+    of observations, then after the second."""
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("w.seconds", buckets)
+    for v in obs_values_1:
+        h.observe(v)
+    s1 = reg.snapshot()["histograms"].get("w.seconds")
+    for v in obs_values_2:
+        h.observe(v)
+    s2 = reg.snapshot()["histograms"]["w.seconds"]
+    return s1, s2
+
+
+def test_delta_counts_isolates_the_window():
+    s1, s2 = _hist_snaps([0.5, 5.0], [5.0, 50.0, 50.0])
+    # absolute ladder indices: 0 → ub 1.0, 1 → ub 10.0, 2 → ub 100.0
+    assert obs.delta_counts(s1, s2) == {1: 1, 2: 2}
+    # prev=None means since birth: the cumulative counts
+    assert obs.delta_counts(None, s2) == {0: 1, 1: 2, 2: 2}
+
+
+def test_delta_quantile_ignores_lifetime_history():
+    """The motivating case: one slow warmup pins the *lifetime* p99
+    forever, but the windowed p99 tracks only the current window."""
+    # two warmup outliers land in overflow; the window is all fast
+    s1, s2 = _hist_snaps([500.0, 600.0], [0.5] * 10)
+    assert s2["p99"] == 600.0                   # lifetime: pinned high
+    assert obs.delta_quantile(s1, s2, 0.99) == 1.0   # window: first bucket
+    assert obs.delta_quantile(s1, s2, 1.0) == 1.0
+
+
+def test_delta_quantile_rank_convention():
+    s1, s2 = _hist_snaps([], [0.5] + [5.0] * 99)
+    # rank = max(ceil(q*n), 1): q=0.01 of 100 obs is the single rank-1
+    # sample, q=0.02 crosses into the second bucket
+    assert obs.delta_quantile(s1, s2, 0.01) == 1.0
+    assert obs.delta_quantile(s1, s2, 0.02) == 10.0
+    assert obs.delta_quantile(None, s2, 0.5) == 10.0
+
+
+def test_delta_quantile_overflow_reports_cumulative_max():
+    s1, s2 = _hist_snaps([0.5], [0.5, 777.0])
+    assert obs.delta_quantile(s1, s2, 1.0) == 777.0
+
+
+def test_delta_quantile_empty_window_and_validation():
+    import pytest as _pytest
+    s1, s2 = _hist_snaps([1.0, 2.0], [])
+    assert obs.delta_quantile(s1, s2, 0.99) == 0.0
+    assert obs.delta_quantile(s1, s1, 0.5) == 0.0
+    with _pytest.raises(ValueError):
+        obs.delta_quantile(s1, s2, 0.0)
+    with _pytest.raises(ValueError):
+        obs.delta_quantile(s1, s2, 1.1)
+
+
+def test_delta_mean():
+    s1, s2 = _hist_snaps([100.0], [1.0, 2.0, 3.0])
+    assert obs.delta_mean(s1, s2) == 2.0
+    assert obs.delta_mean(None, s1) == 100.0
+    assert obs.delta_mean(s2, s2) == 0.0
