@@ -98,6 +98,18 @@ def drill_serving(u, d, *, waves, fail_batches):
         stranded += s
         wave_walls.append((time.perf_counter() - t0) * 1e3)
         stranded += sum(1 for r in res if isinstance(r, Exception))
+    # steady-state retrace assertion: after the fault waves the batcher is
+    # fully warm, so one more same-shape wave must compile nothing — a
+    # retrace here means a serving-path cache key varies per request
+    from repro.analysis.retrace import RetraceSentinel
+    with RetraceSentinel("bench_chaos.serving_steady_state") as sentinel:
+        futs = [server.submit(int(x)) for x in rng.integers(0, u, 8)]
+        res, s_extra = _drain(futs)
+    stranded += s_extra + sum(1 for r in res if isinstance(r, Exception))
+    assert sentinel.count == 0, (
+        f"{sentinel.count} jit compile(s) during a warm same-shape serving "
+        f"wave — steady-state retrace regression (per_site="
+        f"{sentinel.per_site})")
     server.stop()
     s = server.stats()
     n_faults = len(inj.fired)
@@ -119,6 +131,7 @@ def drill_serving(u, d, *, waves, fail_batches):
         "stranded_futures": stranded,
         "recovery_latency_ms": round(max(rec_ms, 0.0), 3),
         "p99_ms": round(s["latency_p99_ms"], 3),
+        "retrace_steady_state": int(sentinel.count),
     }
 
 
@@ -259,6 +272,7 @@ def main():
     doc["recovery_latency_ms"] = doc["serving"]["recovery_latency_ms"]
     doc["bit_parity"] = (doc["engine"]["bit_parity_update"]
                          and doc["engine"]["bit_parity_refold"])
+    doc["retrace_steady_state"] = doc["serving"]["retrace_steady_state"]
     doc["degraded_recall_at20"] = doc["degraded"]["recall_at20"]
     doc["wall_s"] = round(time.perf_counter() - t0, 2)
 

@@ -171,6 +171,20 @@ def run(sizes=DEFAULT_SIZES, k: int = 20, measure: str = "cosine",
         assert p50 <= p99
         row["query_p50_s"] = round(p50, 3)
         row["query_p99_s"] = round(p99, 3)
+        # steady-state retrace sentinel: the sweep above compiled and
+        # warmed every jitted stage, so a repeat query with identical
+        # shapes must be all cache hits — any compile event here is a
+        # shape-bucketing regression (the ku/support padding exists to
+        # prevent exactly this) burning wall clock the timers above
+        # misattribute to compute.  Publishes analysis.retrace.count,
+        # which the exported registry snapshot carries and CI asserts.
+        from repro.analysis.retrace import RetraceSentinel
+        with RetraceSentinel("bench_index.steady_state") as sentinel:
+            index.query(ratings, means, k=k, measure=measure)
+        assert sentinel.count == 0, (
+            f"U={n_users}: {sentinel.count} jit compile(s) during a warm "
+            f"same-shape repeat query — steady-state retrace regression")
+        row["retrace_steady_state"] = int(sentinel.count)
         if trace_path:
             n_ev = obs.export_chrome_trace(trace_path)
             spans = obs.get_spans()

@@ -49,6 +49,7 @@ def _time(f, *args, reps=5, name=None):
 
 
 def _topk_sets(scores: np.ndarray, k: int) -> list:
+    # reprolint: disable=canonical-selection -- stable argsort of negated scores IS the canonical (-score, id) order; set-recall comparison is tie-insensitive anyway
     return [set(np.argsort(-row, kind="stable")[:k].tolist())
             for row in scores]
 

@@ -1,31 +1,45 @@
 """repro.analysis — reprolint: mechanical enforcement of the repo's
 hard-won concurrency and numerical-policy invariants.
 
-Two halves:
+Three layers:
 
-* **Static** (``python -m repro.analysis src/``): five dependency-free
-  AST checks — ``silent-fallback``, ``canonical-selection``,
-  ``kernel-oracle``, ``host-transfer``, ``lock-discipline`` — each the
-  codified form of a bug a past PR shipped and a later PR dug out by
-  hand (see ``repro.analysis.checks``).  Findings gate CI; silencing one
-  requires a written reason, inline
-  (``# reprolint: disable=<check> -- <why>``) or in the committed
-  ``reprolint_baseline.json``.
+* **Static** (``python -m repro.analysis src/ benchmarks/ examples/``):
+  dependency-free AST checks — ``silent-fallback``,
+  ``canonical-selection``, ``kernel-oracle``, ``host-transfer``,
+  ``lock-discipline``, ``lock-order`` — each the codified form of a bug
+  a past PR shipped and a later PR dug out by hand (see
+  ``repro.analysis.checks``).  Findings gate CI; silencing one requires
+  a written reason, inline (``# reprolint: disable=<check> -- <why>``)
+  or in the committed ``reprolint_baseline.json``.
+* **Trace-level** (same CLI, when jax is importable): the jaxpr
+  precision-provenance audit (``precision-widening``, baselined by the
+  committed ``PRECISION_audit.json``) and the steady-state ``retrace``
+  check over the registered hot paths — program analysis on the traced
+  computation, where AST checks cannot see.
 * **Runtime** (``repro.analysis.races``): an Eraser-style lockset tracer
   that wraps the serving-tier objects during the concurrency stress
-  tests and reports unguarded read/write and write/write conflicts.
+  tests and reports unguarded read/write and write/write conflicts —
+  plus a lock-order graph whose cycles (potential deadlocks) fail
+  ``assert_clean()`` alongside the static ``lock-order`` check
+  (``repro.analysis.deadlock`` owns the shared graph).
 
 README § "Static analysis & invariants" has the operator's guide.
 """
 
 from repro.analysis.checks import run_local_checks
+from repro.analysis.deadlock import (CycleFinding, LockOrderGraph,
+                                     METRICS_REGISTRY_LOCK)
 from repro.analysis.findings import (CHECKS, Finding, load_baseline,
-                                     parse_suppressions, report_json)
-from repro.analysis.linter import analyze_paths, main
+                                     parse_suppressions, report_json,
+                                     report_sarif)
+from repro.analysis.linter import analyze_paths, main, run_trace_checks
 from repro.analysis.races import RaceFinding, RaceTracer
+from repro.analysis.retrace import RetraceSentinel, steady_state_findings
 
 __all__ = [
-    "CHECKS", "Finding", "RaceFinding", "RaceTracer", "analyze_paths",
-    "load_baseline", "main", "parse_suppressions", "report_json",
-    "run_local_checks",
+    "CHECKS", "CycleFinding", "Finding", "LockOrderGraph",
+    "METRICS_REGISTRY_LOCK", "RaceFinding", "RaceTracer",
+    "RetraceSentinel", "analyze_paths", "load_baseline", "main",
+    "parse_suppressions", "report_json", "report_sarif",
+    "run_local_checks", "run_trace_checks", "steady_state_findings",
 ]

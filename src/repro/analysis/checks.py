@@ -81,8 +81,10 @@ def _symbol(quals: Dict[ast.AST, str], node: ast.AST) -> str:
 
 _BROAD = {"Exception", "BaseException"}
 _RECORDING_TAILS = {"inc", "observe", "set", "set_attr", "warn", "warning",
-                    "error", "exception", "record", "debug", "info"}
-_RECORDING_PREFIXES = ("obs.", "logging.", "logger.", "log.", "warnings.")
+                    "error", "exception", "record", "debug", "info",
+                    "print_exc", "print_exception"}
+_RECORDING_PREFIXES = ("obs.", "logging.", "logger.", "log.", "warnings.",
+                       "traceback.")
 
 
 def _is_broad(handler: ast.ExceptHandler) -> bool:
@@ -477,6 +479,204 @@ def check_lock_discipline(tree, quals, path) -> List[Finding]:
     return out
 
 
+# -- check 6: lock-order ----------------------------------------------------
+#
+# Static companion of the runtime detector in races.py/deadlock.py: rebuild
+# the lock-order graph from the AST and flag cycles.  Per class —
+#
+#   * a ``with self.B:`` lexically inside ``with self.A:`` is an A→B edge;
+#   * ``self.m()`` called while holding A contributes A→L for every lock L
+#     that ``m`` (transitively) acquires;
+#   * metrics-registry instrument calls (``self._c_x.inc()``,
+#     ``self.registry.counter(…)`` …) made while holding A contribute
+#     A→<metrics-registry>, because every instrument shares its registry's
+#     single lock (repro.obs.metrics) even though no ``self.*lock*`` names
+#     it — this is exactly the BatchingServer._state_lock × registry-lock
+#     surface PR 9 introduced.
+#
+# Any cycle is reported once per class.  Known-safe nestings are annotated
+# via ``_reprolint_lock_order_ok = {"a_lock->b_lock": "reason"}``, which
+# both this check and RaceTracer honour.
+
+from repro.analysis.deadlock import (  # noqa: E402
+    METRICS_REGISTRY_LOCK, LockOrderGraph, edge_key)
+
+_INSTRUMENT_TAILS = {"inc", "observe", "set", "snapshot", "quantile", "dump",
+                     "reset", "counter", "gauge", "histogram",
+                     "delta_counts", "delta_quantile", "delta_mean"}
+_INSTRUMENT_PREFIXES = ("_c_", "_g_", "_h_")
+
+
+def _is_registry_call(call: ast.Call) -> bool:
+    """``self.<instrument>.<verb>()`` where the instrument attr follows the
+    repo's ``_c_*``/``_g_*``/``_h_*`` naming, or any ``*registry*.<verb>()``."""
+    d = dotted(call.func) or ""
+    parts = d.split(".")
+    if len(parts) < 2 or parts[-1] not in _INSTRUMENT_TAILS:
+        return False
+    owner = parts[-2]
+    return (owner.startswith(_INSTRUMENT_PREFIXES)
+            or "registry" in owner.lower())
+
+
+def _lock_order_annotations(cls: ast.ClassDef) -> Dict[str, str]:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) \
+                        and tgt.id == "_reprolint_lock_order_ok":
+                    try:
+                        val = ast.literal_eval(stmt.value)
+                    except (ValueError, SyntaxError):
+                        return {}
+                    if isinstance(val, dict):
+                        return {str(k): str(v) for k, v in val.items()
+                                if str(v).strip()}
+    return {}
+
+
+class _MethodLockInfo:
+    __slots__ = ("acquires", "uses_registry", "calls_held", "edges")
+
+    def __init__(self):
+        self.acquires: Set[str] = set()        # locks taken anywhere in body
+        self.uses_registry = False             # instrument call anywhere
+        # (callee, held-tuple, line): self.m() under locks — resolved after
+        # the transitive acquire sets are known
+        self.calls_held: List[Tuple[str, Tuple[str, ...], int]] = []
+        self.edges: List[Tuple[str, str, int]] = []   # direct nested withs
+
+
+def _scan_method_locks(meth) -> _MethodLockInfo:
+    info = _MethodLockInfo()
+
+    def scan(stmts, held: Tuple[str, ...]):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan(stmt.body, held)     # nested def: thread body, same self
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                taken = [a for a in
+                         (_lock_attr_of_with_item(i) for i in stmt.items)
+                         if a]
+                for expr in (i.context_expr for i in stmt.items):
+                    scan_expr(expr, held)
+                inner = held
+                for lock in taken:
+                    info.acquires.add(lock)
+                    for h in inner:
+                        if h != lock:
+                            info.edges.append((h, lock, stmt.lineno))
+                    inner = inner + (lock,)
+                scan(stmt.body, inner)
+                continue
+            for child in ast.iter_child_nodes(stmt):
+                if not isinstance(child, (ast.stmt, ast.ExceptHandler)):
+                    scan_expr(child, held)
+            inner_stmts = [c for c in ast.iter_child_nodes(stmt)
+                           if isinstance(c, (ast.stmt, ast.ExceptHandler))]
+            if inner_stmts:
+                scan(inner_stmts, held)
+
+    def scan_expr(expr, held: Tuple[str, ...]):
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            parts = d.split(".")
+            if _is_registry_call(node):
+                info.uses_registry = True
+                for h in held:
+                    info.edges.append(
+                        (h, METRICS_REGISTRY_LOCK, node.lineno))
+            elif len(parts) == 2 and parts[0] == "self":
+                info.calls_held.append((parts[1], held, node.lineno))
+            # bare .acquire() on a lock attr counts as taking it
+            if parts[-1] == "acquire" and len(parts) >= 2 \
+                    and _is_lockish_name(parts[-2]):
+                info.acquires.add(parts[-2])
+
+    scan(meth.body, ())
+    return info
+
+
+def check_lock_order(tree, quals, path) -> List[Finding]:
+    out = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        infos: Dict[str, _MethodLockInfo] = {}
+        for meth in cls.body:
+            if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                infos[meth.name] = _scan_method_locks(meth)
+        if not any(i.acquires or i.edges for i in infos.values()):
+            continue
+
+        # transitive closure of (acquires, uses_registry) over self.m() calls
+        trans_acq = {m: set(i.acquires) for m, i in infos.items()}
+        trans_reg = {m: i.uses_registry for m, i in infos.items()}
+        changed = True
+        while changed:
+            changed = False
+            for m, i in infos.items():
+                for callee, _, _ in i.calls_held:
+                    ci = infos.get(callee)
+                    if ci is None:
+                        continue
+                    before = len(trans_acq[m])
+                    trans_acq[m] |= trans_acq[callee]
+                    if trans_acq[callee] and len(trans_acq[m]) != before:
+                        changed = True
+                    if trans_reg[callee] and not trans_reg[m]:
+                        trans_reg[m] = True
+                        changed = True
+
+        graph = LockOrderGraph()
+        first_line: Dict[Tuple[str, str], Tuple[int, str]] = {}
+
+        def add(src, dst, line, unit):
+            graph.add_edge(src, dst, f"{unit} (line {line})")
+            first_line.setdefault((src, dst), (line, unit))
+
+        for m, i in infos.items():
+            for src, dst, line in i.edges:
+                add(src, dst, line, m)
+            for callee, held, line in i.calls_held:
+                if not held:
+                    continue
+                ci = infos.get(callee)
+                if ci is None:
+                    continue
+                for lock in trans_acq[callee]:
+                    for h in held:
+                        if h != lock:
+                            add(h, lock, line,
+                                f"{m} -> self.{callee}()")
+                if trans_reg[callee]:
+                    for h in held:
+                        add(h, METRICS_REGISTRY_LOCK, line,
+                            f"{m} -> self.{callee}()")
+
+        ann = _lock_order_annotations(cls)
+        cls_sym = _symbol(quals, cls)
+        qual = f"{cls_sym}.{cls.name}" if cls_sym != "<module>" else cls.name
+        for cyc in graph.cycles(ann):
+            line, unit = first_line.get(
+                (cyc.edges[0].src, cyc.edges[0].dst), (cls.lineno, cls.name))
+            loop = " -> ".join(cyc.nodes + (cyc.nodes[0],))
+            where = "; ".join(str(e) for e in cyc.edges)
+            out.append(Finding(
+                check="lock-order", path=path, line=line, col=0,
+                symbol=qual,
+                message=f"lock acquisition cycle {loop} — a thread "
+                        f"interleaving can deadlock ({where}); impose one "
+                        f"order, or annotate the edge in "
+                        f"_reprolint_lock_order_ok with a reason",
+                suppressed=cyc.suppressed,
+                suppress_reason=cyc.reason))
+    return out
+
+
 # -- registry ---------------------------------------------------------------
 
 LOCAL_CHECKS = (
@@ -484,6 +684,7 @@ LOCAL_CHECKS = (
     check_canonical_selection,
     check_host_transfer,
     check_lock_discipline,
+    check_lock_order,
 )
 
 

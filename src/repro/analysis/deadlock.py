@@ -1,0 +1,168 @@
+"""Lock-order graph + cycle detection, shared by the static and runtime
+deadlock detectors.
+
+The classic deadlock shape is an *ordering inversion*: thread 1 acquires
+lock A then (still holding A) lock B, while thread 2 nests them the
+other way around.  Neither thread ever deadlocks alone — the bug lives
+in the pair of orders, so the right artifact is a graph:
+
+    node  = a lock (named "label.attr" at runtime, "attr" statically)
+    edge  = A → B when B was acquired while A was held
+
+Any cycle in that graph is a potential deadlock: some interleaving of
+the participating threads can block forever.  This module owns the
+graph and the cycle search; the two producers feed it from opposite
+ends —
+
+* :mod:`repro.analysis.races` records edges from live
+  ``_InstrumentedLock.acquire`` calls while a stress test runs, and
+  ``RaceTracer.assert_clean()`` raises on cycles alongside lockset
+  conflicts.
+* :func:`repro.analysis.checks.check_lock_order` rebuilds the same
+  graph from the AST (lexically nested ``with self._x_lock:`` blocks
+  plus transitive ``self.method()`` calls) so the inversion is caught
+  before any thread runs.
+
+The detection is deliberately thread-agnostic and conservative: a cycle
+is reported even if today's callers never interleave, because the next
+caller might.  Known-safe nestings are annotated, not silenced, via a
+class-level ``_reprolint_lock_order_ok = {"a_lock->b_lock": reason}``
+mirroring ``_reprolint_race_ok``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: Pseudo-node for the metrics-registry lock: every Counter/Gauge/Histogram
+#: shares its registry's single lock (see repro.obs.metrics), so any
+#: instrument call made while holding an application lock is an ordering
+#: edge onto this one node even though no ``self.<lock>`` names it.
+METRICS_REGISTRY_LOCK = "<metrics-registry>"
+
+_MAX_SITES_PER_EDGE = 4
+
+
+@dataclasses.dataclass
+class OrderEdge:
+    src: str
+    dst: str
+    sites: List[str] = dataclasses.field(default_factory=list)
+    count: int = 0
+
+    def __str__(self) -> str:
+        where = f" ({self.sites[0]})" if self.sites else ""
+        return f"{self.src} -> {self.dst}{where}"
+
+
+@dataclasses.dataclass
+class CycleFinding:
+    """One lock-order cycle; ``nodes`` in acquisition order (the edge
+    nodes[-1] → nodes[0] closes the loop)."""
+    nodes: Tuple[str, ...]
+    edges: List[OrderEdge]
+    suppressed: bool = False
+    reason: str = ""
+
+    def __str__(self) -> str:
+        loop = " -> ".join(self.nodes + (self.nodes[0],))
+        tag = f"  [annotated: {self.reason}]" if self.suppressed else ""
+        where = "; ".join(str(e) for e in self.edges)
+        return f"lock-order cycle {loop} — {where}{tag}"
+
+
+def edge_key(src: str, dst: str) -> str:
+    """Annotation key for an edge, on bare attr names (labels stripped)."""
+    return f"{_attr(src)}->{_attr(dst)}"
+
+
+def _attr(node: str) -> str:
+    return node.rsplit(".", 1)[-1]
+
+
+class LockOrderGraph:
+    """Directed graph of observed/inferred lock acquisition orders."""
+
+    def __init__(self):
+        self._edges: Dict[Tuple[str, str], OrderEdge] = {}
+
+    def add_edge(self, src: str, dst: str, site: str = "") -> None:
+        if src == dst:
+            return          # re-entrant acquisition, not an ordering fact
+        e = self._edges.get((src, dst))
+        if e is None:
+            e = self._edges[(src, dst)] = OrderEdge(src, dst)
+        e.count += 1
+        if site and site not in e.sites \
+                and len(e.sites) < _MAX_SITES_PER_EDGE:
+            e.sites.append(site)
+
+    def edges(self) -> List[OrderEdge]:
+        return list(self._edges.values())
+
+    def merge(self, other: "LockOrderGraph") -> None:
+        for e in other.edges():
+            cur = self._edges.get((e.src, e.dst))
+            if cur is None:
+                self._edges[(e.src, e.dst)] = OrderEdge(
+                    e.src, e.dst, list(e.sites), e.count)
+            else:
+                cur.count += e.count
+                for s in e.sites:
+                    if s not in cur.sites \
+                            and len(cur.sites) < _MAX_SITES_PER_EDGE:
+                        cur.sites.append(s)
+
+    # -- cycle search --------------------------------------------------------
+    def cycles(self,
+               annotations: Optional[Dict[str, str]] = None
+               ) -> List[CycleFinding]:
+        """Enumerate elementary cycles, deduped by participant set (the
+        A→B→A and B→A→B walks are one inversion, not two).  A cycle is
+        marked suppressed when any of its edges carries a written reason
+        in ``annotations`` (keys from :func:`edge_key`)."""
+        ann = annotations or {}
+        adj: Dict[str, List[str]] = {}
+        for (src, dst) in self._edges:
+            adj.setdefault(src, []).append(dst)
+        for outs in adj.values():
+            outs.sort()
+
+        seen_sets = set()
+        out: List[CycleFinding] = []
+
+        def dfs(start: str, node: str, path: List[str],
+                on_path: set) -> None:
+            for nxt in adj.get(node, ()):
+                if nxt == start:
+                    key = frozenset(path)
+                    if key in seen_sets:
+                        continue
+                    seen_sets.add(key)
+                    edges = [self._edges[(a, b)] for a, b in
+                             zip(path, path[1:] + [start])]
+                    reason = ""
+                    for e in edges:
+                        r = ann.get(edge_key(e.src, e.dst), "")
+                        if r:
+                            reason = r
+                            break
+                    out.append(CycleFinding(
+                        nodes=tuple(path), edges=edges,
+                        suppressed=bool(reason), reason=reason))
+                elif nxt not in on_path and nxt > start:
+                    # only walk nodes lexicographically after the start so
+                    # each cycle is found once, from its smallest node
+                    on_path.add(nxt)
+                    dfs(start, nxt, path + [nxt], on_path)
+                    on_path.discard(nxt)
+
+        for start in sorted(adj):
+            dfs(start, start, [start], {start})
+        out.sort(key=lambda c: c.nodes)
+        return out
+
+
+def format_cycles(cycles: Iterable[CycleFinding]) -> str:
+    return "\n  ".join(str(c) for c in cycles)

@@ -38,6 +38,9 @@ CHECKS = (
     "kernel-oracle",        # every Pallas kernel pairs with a ref + test
     "host-transfer",        # host round-trips inside jitted functions
     "lock-discipline",      # shared attrs written off-lock
+    "lock-order",           # nested lock acquisitions forming a cycle
+    "precision-widening",   # narrow dtypes widened inside jitted hot paths
+    "retrace",              # jit cache misses after warmup (shape churn)
 )
 BAD_SUPPRESSION = "bad-suppression"
 
@@ -199,6 +202,65 @@ def write_baseline(path, findings: Iterable[Finding]) -> int:
     Path(path).write_text(json.dumps(
         {"version": BASELINE_VERSION, "entries": entries}, indent=2) + "\n")
     return len(entries)
+
+
+_RULE_DESCRIPTIONS = {
+    "silent-fallback": "broad except must record the failure or re-raise",
+    "canonical-selection": "raw top-M selection outside the tie-repaired "
+                           "policy",
+    "kernel-oracle": "every Pallas kernel pairs with a ref oracle + test",
+    "host-transfer": "host round-trip inside a jitted function",
+    "lock-discipline": "shared attribute written off-lock",
+    "lock-order": "nested lock acquisitions form a cycle (deadlock risk)",
+    "precision-widening": "narrow dtype widened inside a jitted hot path",
+    "retrace": "jit cache miss after warmup (steady-state recompile)",
+    BAD_SUPPRESSION: "reprolint suppression without a written reason",
+}
+
+
+def report_sarif(findings: Iterable[Finding]) -> dict:
+    """Findings as a minimal SARIF 2.1.0 log — the format GitHub renders
+    as inline PR annotations when uploaded from CI.  Active findings are
+    ``error``; suppressed/baselined ones are carried as ``note`` results
+    with a SARIF suppression object so the written reason stays visible
+    in the artifact."""
+    fs = list(findings)
+    rules = [{
+        "id": check,
+        "shortDescription": {"text": desc},
+    } for check, desc in _RULE_DESCRIPTIONS.items()]
+    results = []
+    for f in fs:
+        res = {
+            "ruleId": f.check,
+            "level": "error" if f.active else "note",
+            "message": {"text": f"({f.symbol}) {f.message}"},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.path.replace("\\", "/")},
+                    "region": {"startLine": max(f.line, 1),
+                               "startColumn": max(f.col, 0) + 1},
+                },
+            }],
+        }
+        if f.suppressed or f.baselined:
+            res["suppressions"] = [{
+                "kind": "inSource" if f.suppressed else "external",
+                "justification": f.suppress_reason or "baselined",
+            }]
+        results.append(res)
+    return {
+        "$schema": "https://raw.githubusercontent.com/oasis-tcs/"
+                   "sarif-spec/master/Schemata/sarif-schema-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "reprolint",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
 
 
 def report_json(findings: Iterable[Finding], *, stale=None) -> dict:

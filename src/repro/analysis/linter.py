@@ -1,11 +1,24 @@
 """reprolint orchestration: collect files, run checks, gate on the baseline.
 
-``python -m repro.analysis src/`` is the CI entry point — exit 0 means
-every finding is either inline-suppressed with a reason or carried by the
-committed ``reprolint_baseline.json``; anything else exits 1 and prints
-the offending locations.  ``--json`` writes the full findings report
-(including suppressed/baselined ones and their reasons) for the CI
-artifact.
+``python -m repro.analysis src/ benchmarks/ examples/`` is the CI entry
+point — exit 0 means every finding is either inline-suppressed with a
+reason or carried by a committed baseline; exit 1 means active findings;
+exit 2 means the gate's own inputs are rotten (a reasonless baseline
+entry, or a *stale* entry whose file was scanned but whose symbol no
+longer fires — stale debt must be deleted, not carried).  ``--json``
+writes the full findings report for the CI artifact; ``--format sarif``
+switches that file to SARIF 2.1.0 so GitHub renders PR annotations.
+
+Beyond the AST checks, two *trace-level* checks run whenever jax is
+importable and the scan covers hot-path source files (they degrade to a
+printed note otherwise, so the stdlib-only CI job still works):
+
+* ``precision-widening`` — the jaxpr audit of
+  :mod:`repro.analysis.jaxpr` over the registered hot paths, baselined
+  by the committed ``PRECISION_audit.json`` (reasons mandatory;
+  ``--write-precision-audit`` regenerates it preserving reasons).
+* ``retrace`` — every hot path re-called with fresh same-shape arrays
+  after warmup must not grow its jit cache.
 """
 
 from __future__ import annotations
@@ -20,6 +33,7 @@ from repro.analysis import checks as C
 from repro.analysis import findings as F
 
 DEFAULT_BASELINE = "reprolint_baseline.json"
+DEFAULT_PRECISION_AUDIT = "PRECISION_audit.json"
 
 
 def _rel(p: Path) -> Path:
@@ -90,6 +104,30 @@ def analyze_paths(paths: Sequence[str], *,
     return all_findings
 
 
+def run_trace_checks(scanned: set, *, audit_path=DEFAULT_PRECISION_AUDIT):
+    """Jaxpr precision audit + steady-state retrace check over the hot
+    paths whose source files are in ``scanned``.  Returns
+    ``(findings, stale_audit_keys, note)``; when jax is unavailable (the
+    stdlib-only CI lane) or no hot-path file was scanned, everything is
+    empty and ``note`` says why."""
+    try:
+        import jax  # noqa: F401
+    except Exception as e:          # pragma: no cover - env dependent
+        return [], [], f"trace checks skipped (jax unavailable: {e})"
+    from repro.analysis import jaxpr as J
+    from repro.analysis import retrace as R
+    hps = [hp for hp in J.HOT_PATHS if hp.path in scanned]
+    if not hps:
+        return [], [], "trace checks skipped (no hot-path file in scan)"
+    fs = J.widening_findings(J.run_precision_audit(hps))
+    audit = J.load_audit(audit_path)    # ValueError → caller exits 2
+    stale = F.apply_baseline(fs, audit)
+    traced_paths = {hp.path for hp in hps}
+    stale = [k for k in stale if k[1] in traced_paths]
+    fs.extend(R.steady_state_findings(hps))
+    return fs, stale, ""
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -108,10 +146,41 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="tests root for the kernel-oracle pairing check "
                          "(default ./tests; pass '' to skip)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the full findings report as JSON")
+                    help="write the full findings report to PATH "
+                         "(format per --format)")
+    ap.add_argument("--format", choices=("json", "sarif"), default="json",
+                    help="report format for --json: the findings JSON "
+                         "schema, or SARIF 2.1.0 for GitHub PR "
+                         "annotations")
+    ap.add_argument("--no-trace-checks", action="store_true",
+                    help="skip the jaxpr precision audit and the retrace "
+                         "steady-state check (they need jax + the "
+                         "hot-path modules importable)")
+    ap.add_argument("--precision-audit", default=DEFAULT_PRECISION_AUDIT,
+                    metavar="PATH",
+                    help=f"committed precision-widening audit/baseline "
+                         f"(default {DEFAULT_PRECISION_AUDIT})")
+    ap.add_argument("--write-precision-audit", action="store_true",
+                    help="re-trace every hot path and rewrite the "
+                         "precision audit, preserving existing reasons "
+                         "(new entries get TODO)")
     ap.add_argument("--verbose", action="store_true",
                     help="also print suppressed and baselined findings")
     args = ap.parse_args(argv)
+
+    if args.write_precision_audit:
+        from repro.analysis import jaxpr as J
+        try:
+            old = J.load_audit(args.precision_audit)
+        except ValueError:
+            old = {}
+        reasons = {sym: reason for (_, _, sym), reason in old.items()}
+        n = J.write_audit(args.precision_audit, J.run_precision_audit(),
+                          reasons)
+        print(f"reprolint: wrote {n} widening(s) to "
+              f"{args.precision_audit} — replace every TODO reason "
+              f"before committing")
+        return 0
 
     fs = analyze_paths(args.paths, tests_dir=args.tests_dir or None)
 
@@ -122,6 +191,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"committing")
         return 0
 
+    scanned = {str(p) for p in iter_py_files(args.paths)}
     stale: List = []
     if not args.no_baseline:
         try:
@@ -131,23 +201,49 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             return 2
         stale = F.apply_baseline(fs, baseline)
 
+    note = ""
+    if not args.no_trace_checks:
+        try:
+            tfs, tstale, note = run_trace_checks(
+                scanned, audit_path=args.precision_audit)
+        except ValueError as e:
+            print(f"reprolint: bad precision audit: {e}", file=sys.stderr)
+            return 2
+        fs = fs + tfs
+        stale = stale + tstale
+    if note:
+        print(f"reprolint: {note}")
+
     if args.json:
         import json
-        Path(args.json).write_text(
-            json.dumps(F.report_json(fs, stale=stale), indent=2) + "\n")
+        report = F.report_sarif(fs) if args.format == "sarif" \
+            else F.report_json(fs, stale=stale)
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
 
     active = [f for f in fs if f.active]
     shown = fs if args.verbose else active
     for f in sorted(shown, key=lambda f: (f.path, f.line, f.check)):
         print(f)
+    # a stale entry whose file was *scanned* is rot in the gate itself:
+    # the debt it documents no longer exists, so carrying it hides the
+    # next real finding that lands on the same key.  Hard error.
+    stale_scanned = [k for k in stale if k[1] in scanned]
     for key in stale:
-        print(f"reprolint: stale baseline entry (no longer fires, delete "
-              f"it): {key}")
+        if key in stale_scanned:
+            print(f"reprolint: ERROR stale baseline entry — "
+                  f"{key[1]} was scanned but {key[0]}/{key[2]} no longer "
+                  f"fires; delete the entry (or fix the symbol name)",
+                  file=sys.stderr)
+        else:
+            print(f"reprolint: stale baseline entry (file outside this "
+                  f"scan, not gating): {key}")
     n_sup = sum(1 for f in fs if f.suppressed)
     n_base = sum(1 for f in fs if f.baselined)
     print(f"reprolint: {len(active)} finding(s) "
           f"({n_sup} suppressed with reasons, {n_base} baselined) over "
-          f"{len(iter_py_files(args.paths))} file(s)")
+          f"{len(scanned)} file(s)")
+    if stale_scanned:
+        return 2
     return 1 if active else 0
 
 

@@ -39,6 +39,8 @@ import threading
 from contextlib import contextmanager
 from typing import Any, Dict, FrozenSet, List, Optional, Set, Tuple
 
+from .deadlock import CycleFinding, LockOrderGraph, format_cycles
+
 _LOCK_TYPES = (type(threading.Lock()), type(threading.RLock()))
 
 
@@ -84,7 +86,10 @@ class _InstrumentedLock:
     def acquire(self, *a, **kw):
         got = self._inner.acquire(*a, **kw)
         if got:
-            self._tracer._held_list().append(id(self))
+            held = self._tracer._held_list()
+            if id(self) not in held:      # re-entrant RLock: no new edge
+                self._tracer._note_lock_order(held, id(self))
+            held.append(id(self))
         return got
 
     def release(self):
@@ -134,6 +139,9 @@ class RaceTracer:
         self._skip_attrs: Dict[int, Set[str]] = {}
         self._findings: List[RaceFinding] = []
         self._class_cache: Dict[type, type] = {}
+        self._lock_names: Dict[int, str] = {}      # id(wrapper) -> "label.attr"
+        self._lock_graph = LockOrderGraph()
+        self._lock_order_ann: Dict[str, str] = {}  # "attrA->attrB" -> reason
 
     # -- lockset bookkeeping ------------------------------------------------
     def _held_list(self) -> list:
@@ -141,6 +149,24 @@ class RaceTracer:
         if held is None:
             held = self._tls.held = []
         return held
+
+    def _note_lock_order(self, held: list, new_id: int) -> None:
+        """Record src→dst for every lock held when ``new_id`` is taken."""
+        if not held:
+            return
+        frame = sys._getframe(2)           # past acquire/__enter__
+        fname = frame.f_code.co_filename
+        while frame is not None and fname.endswith("races.py"):
+            frame = frame.f_back
+            fname = frame.f_code.co_filename if frame else ""
+        site = (f"{frame.f_code.co_name} "
+                f"({fname.rsplit('/', 1)[-1]}:{frame.f_lineno})"
+                if frame else "<unknown>")
+        with self._mu:
+            dst = self._lock_names.get(new_id, f"<lock#{new_id}>")
+            for h in set(held):
+                src = self._lock_names.get(h, f"<lock#{h}>")
+                self._lock_graph.add_edge(src, dst, site)
 
     # -- enrolment ----------------------------------------------------------
     @contextmanager
@@ -151,18 +177,25 @@ class RaceTracer:
         cls = type(obj)
         label = name or cls.__name__
         ann: Dict[str, str] = {}
+        lock_ann: Dict[str, str] = {}
         for klass in reversed(cls.__mro__):
             ann.update(getattr(klass, "_reprolint_race_ok", {}) or {})
+            lock_ann.update(
+                getattr(klass, "_reprolint_lock_order_ok", {}) or {})
         swapped: Dict[str, Any] = {}
+        wrappers: Dict[str, _InstrumentedLock] = {}
         for attr, value in list(obj.__dict__.items()):
             if isinstance(value, _LOCK_TYPES):
                 swapped[attr] = value
-                object.__setattr__(obj, attr,
-                                   _InstrumentedLock(value, attr, self))
+                wrappers[attr] = _InstrumentedLock(value, attr, self)
+                object.__setattr__(obj, attr, wrappers[attr])
         with self._mu:
             self._labels[id(obj)] = label
             self._annotations[id(obj)] = ann
             self._skip_attrs[id(obj)] = set(swapped)
+            self._lock_order_ann.update(lock_ann)
+            for attr, w in wrappers.items():
+                self._lock_names[id(w)] = f"{label}.{attr}"
         traced_cls = self._traced_class(cls)
         obj.__class__ = traced_cls
         try:
@@ -256,12 +289,41 @@ class RaceTracer:
         return fs if include_suppressed \
             else [f for f in fs if not f.suppressed]
 
+    def lock_order_graph(self) -> LockOrderGraph:
+        with self._mu:
+            g = LockOrderGraph()
+            g.merge(self._lock_graph)
+        return g
+
+    def lock_cycles(self,
+                    include_suppressed: bool = False) -> List[CycleFinding]:
+        """Cycles in the observed lock-order graph (potential deadlocks).
+        A cycle any of whose edges is annotated in a traced class's
+        ``_reprolint_lock_order_ok`` is suppressed with that reason."""
+        with self._mu:
+            ann = dict(self._lock_order_ann)
+        cs = self.lock_order_graph().cycles(ann)
+        return cs if include_suppressed \
+            else [c for c in cs if not c.suppressed]
+
     def assert_clean(self) -> None:
-        """Raise with every unannotated conflict (the test-suite gate)."""
+        """Raise with every unannotated conflict and every unannotated
+        lock-order cycle (the test-suite gate)."""
         bad = self.report()
+        cycles = self.lock_cycles()
+        msgs = []
         if bad:
             lines = "\n  ".join(str(f) for f in bad)
-            raise AssertionError(
+            msgs.append(
                 f"race harness found {len(bad)} unguarded conflict(s):\n  "
                 f"{lines}\n(fix with a lock, or annotate the attribute in "
                 f"the class's _reprolint_race_ok with a written reason)")
+        if cycles:
+            msgs.append(
+                f"lock-order graph has {len(cycles)} cycle(s) — a thread "
+                f"interleaving can deadlock:\n  {format_cycles(cycles)}\n"
+                f"(impose one acquisition order, or annotate the edge in "
+                f"the class's _reprolint_lock_order_ok with a written "
+                f"reason)")
+        if msgs:
+            raise AssertionError("\n".join(msgs))

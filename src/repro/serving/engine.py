@@ -327,21 +327,28 @@ class BatchingServer:
         dl = None if deadline_ms is None else t0 + deadline_ms / 1e3
         # enqueue under the state lock: stop() flips _stopped under the
         # same lock *before* its final flush, so a request admitted here
-        # is either served, drained, or flushed — never stranded
+        # is either served, drained, or flushed — never stranded.  The
+        # shed counter is recorded *after* the lock is released: every
+        # registry instrument shares the registry's single lock, and
+        # nesting it under _state_lock is exactly the ordering edge the
+        # lock-order detector exists to keep one-directional
+        shed: Optional[Overloaded] = None
         with self._state_lock:
             if self._stopped:
                 raise ServerStopped(
                     "submit() after stop(): the queue is no longer drained")
             if request_class == "bulk" and self._health >= SHEDDING:
-                self._c_shed.inc()
-                raise Overloaded("shedding bulk traffic (health=SHEDDING)")
-            try:
-                self._q.put_nowait((user, t0, dl, request_class, fut))
-            except queue.Full:
-                self._c_shed.inc()
-                raise Overloaded(
-                    f"admission queue at high-water mark "
-                    f"({self.max_queue}); retry with backoff")
+                shed = Overloaded("shedding bulk traffic (health=SHEDDING)")
+            else:
+                try:
+                    self._q.put_nowait((user, t0, dl, request_class, fut))
+                except queue.Full:
+                    shed = Overloaded(
+                        f"admission queue at high-water mark "
+                        f"({self.max_queue}); retry with backoff")
+        if shed is not None:
+            self._c_shed.inc()
+            raise shed
         self._c_requests.inc()
         return fut
 

@@ -132,6 +132,104 @@ def test_single_thread_and_init_writes_never_flag():
     assert tracer.report(include_suppressed=True) == []
 
 
+# -- lock-order (deadlock) detection -----------------------------------------
+
+class _TwoLocks:
+    def __init__(self):
+        self.a_lock = threading.Lock()
+        self.b_lock = threading.Lock()
+
+    def fwd(self):
+        with self.a_lock:
+            with self.b_lock:
+                pass
+
+    def rev(self):
+        with self.b_lock:
+            with self.a_lock:
+                pass
+
+
+class _TwoLocksAnnotated(_TwoLocks):
+    _reprolint_lock_order_ok = {
+        "b_lock->a_lock": "fixture: rev() only runs single-threaded at "
+                          "shutdown, the inversion cannot interleave",
+    }
+
+
+def test_lock_order_cycle_is_detected_at_assert_clean():
+    """ABBA acquisition order — no actual deadlock need occur; the
+    inverted edges alone prove a deadly interleaving exists."""
+    obj = _TwoLocks()
+    tracer = RaceTracer()
+    with tracer.trace(obj, "abba"):
+        obj.fwd()
+        obj.rev()
+    cycles = tracer.lock_cycles()
+    assert len(cycles) == 1
+    nodes = set(cycles[0].nodes)
+    assert nodes == {"abba.a_lock", "abba.b_lock"}
+    assert all(e.sites for e in cycles[0].edges)
+    with pytest.raises(AssertionError, match="deadlock"):
+        tracer.assert_clean()
+
+
+def test_lock_order_consistent_acquisition_is_clean():
+    obj = _TwoLocks()
+    tracer = RaceTracer()
+    with tracer.trace(obj, "fwd-only"):
+        for _ in range(3):
+            obj.fwd()
+    assert tracer.lock_cycles() == []
+    assert len(tracer.lock_order_graph().edges()) == 1
+    tracer.assert_clean()
+
+
+def test_lock_order_annotation_suppresses_with_reason():
+    obj = _TwoLocksAnnotated()
+    tracer = RaceTracer()
+    with tracer.trace(obj, "annotated"):
+        obj.fwd()
+        obj.rev()
+    assert tracer.lock_cycles() == []
+    tracer.assert_clean()
+    sup = tracer.lock_cycles(include_suppressed=True)
+    assert len(sup) == 1 and sup[0].suppressed
+    assert "shutdown" in sup[0].reason
+
+
+def test_lock_order_cross_object_cycle():
+    """Edges join a single graph across traced objects: holding server's
+    lock while taking engine's, and elsewhere the reverse, is the same
+    deadlock even though neither class alone inverts."""
+    a, b = _Plain(), _Plain()
+    tracer = RaceTracer()
+    with tracer.trace(a, "a"), tracer.trace(b, "b"):
+        with a.lock:
+            with b.lock:
+                pass
+        with b.lock:
+            with a.lock:
+                pass
+    cycles = tracer.lock_cycles()
+    assert len(cycles) == 1
+    assert set(cycles[0].nodes) == {"a.lock", "b.lock"}
+    with pytest.raises(AssertionError, match="deadlock"):
+        tracer.assert_clean()
+
+
+def test_lock_order_reentrant_same_lock_is_not_an_edge():
+    obj = _Plain()
+    obj.rlock = threading.RLock()
+    tracer = RaceTracer()
+    with tracer.trace(obj, "reentrant"):
+        with obj.rlock:
+            with obj.rlock:
+                pass
+    assert tracer.lock_order_graph().edges() == []
+    tracer.assert_clean()
+
+
 # -- the satellite: trace the real serving stack -----------------------------
 
 def _engine(rng, u=64, d=32, **kw):

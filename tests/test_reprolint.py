@@ -349,6 +349,187 @@ def test_suppression_in_string_literal_is_not_a_suppression(tmp_path):
     assert len(_active(fs, "canonical-selection")) == 1
 
 
+# -- check 6: lock-order -----------------------------------------------------
+
+_ABBA = """
+    import threading
+
+    class S:
+        def __init__(self):
+            self.a_lock = threading.Lock()
+            self.b_lock = threading.Lock()
+
+        def fwd(self):
+            with self.a_lock:
+                with self.b_lock:
+                    pass
+
+        def rev(self):
+            with self.b_lock:
+                with self.a_lock:
+                    pass
+"""
+
+
+def test_lock_order_fires_on_abba(tmp_path):
+    fs = _lint(tmp_path, _ABBA)
+    hits = _active(fs, "lock-order")
+    assert len(hits) == 1
+    assert hits[0].symbol == "S"
+    assert "a_lock" in hits[0].message and "b_lock" in hits[0].message
+
+
+def test_lock_order_quiet_on_consistent_order(tmp_path):
+    fs = _lint(tmp_path, """
+        import threading
+
+        class S:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+
+            def fwd(self):
+                with self.a_lock:
+                    with self.b_lock:
+                        pass
+
+            def also_fwd(self):
+                with self.a_lock, self.b_lock:
+                    pass
+    """)
+    assert _active(fs, "lock-order") == []
+
+
+def test_lock_order_annotation_suppresses_with_reason(tmp_path):
+    fs = _lint(tmp_path, """
+        import threading
+
+        class S:
+            _reprolint_lock_order_ok = {
+                "b_lock->a_lock": "fixture: rev() only runs at shutdown "
+                                  "after fwd() threads are joined",
+            }
+
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+
+            def fwd(self):
+                with self.a_lock:
+                    with self.b_lock:
+                        pass
+
+            def rev(self):
+                with self.b_lock:
+                    with self.a_lock:
+                        pass
+    """)
+    assert _active(fs, "lock-order") == []
+    sup = [f for f in fs if f.check == "lock-order" and f.suppressed]
+    assert len(sup) == 1 and "shutdown" in sup[0].suppress_reason
+
+
+def test_lock_order_sees_transitive_self_calls(tmp_path):
+    # the PR 9 shape: submit() holds _state_lock and calls a helper that
+    # bumps a metrics counter, while a registry-side path would take the
+    # locks in the other direction — the cycle only exists transitively
+    fs = _lint(tmp_path, """
+        import threading
+
+        class S:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+
+            def outer(self):
+                with self.a_lock:
+                    self._helper()
+
+            def _helper(self):
+                with self.b_lock:
+                    pass
+
+            def rev(self):
+                with self.b_lock:
+                    with self.a_lock:
+                        pass
+    """)
+    assert len(_active(fs, "lock-order")) == 1
+
+
+def test_lock_order_registry_call_under_lock_makes_an_edge(tmp_path):
+    # a registry call under a held lock adds lock -> <metrics-registry>;
+    # one-directional, so no cycle and no finding — but the reverse
+    # direction (snapshot-style method taking the lock) closes it
+    fs = _lint(tmp_path, """
+        import threading
+
+        class OneWay:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+
+            def f(self):
+                with self.a_lock:
+                    self._c_shed.inc()
+    """)
+    assert _active(fs, "lock-order") == []
+
+
+def test_serving_and_metrics_have_no_lock_order_edges():
+    """Satellite: the static check over the real serving + metrics tier
+    stays silent — PR 10 hoisted the shed-counter inc out of
+    ``_state_lock``, removing the only registry edge."""
+    repo = Path(__file__).resolve().parent.parent
+    fs = analyze_paths([str(repo / "src/repro/serving/engine.py"),
+                        str(repo / "src/repro/obs/metrics.py")],
+                       tests_dir=None)
+    assert [f for f in fs if f.check == "lock-order"] == []
+
+
+# -- SARIF output ------------------------------------------------------------
+
+def test_sarif_report_structure(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def f(s):
+            return jax.lax.top_k(s, 5)
+
+        def g(s):
+            # reprolint: disable=canonical-selection -- fixture reason
+            return jax.lax.top_k(s, 5)
+    """)
+    doc = F.report_sarif(fs)
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    assert run["tool"]["driver"]["name"] == "reprolint"
+    rule_ids = {r["id"] for r in run["tool"]["driver"]["rules"]}
+    assert "canonical-selection" in rule_ids and "lock-order" in rule_ids
+    results = run["results"]
+    assert len(results) == 2
+    active = [r for r in results if not r.get("suppressions")]
+    sup = [r for r in results if r.get("suppressions")]
+    assert len(active) == 1 and active[0]["level"] == "error"
+    assert len(sup) == 1
+    assert sup[0]["suppressions"][0]["kind"] == "inSource"
+    assert sup[0]["suppressions"][0]["justification"] == "fixture reason"
+    loc = active[0]["locations"][0]["physicalLocation"]
+    assert loc["region"]["startLine"] >= 1
+
+
+def test_cli_sarif_format(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\ndef f(s):\n    return jax.lax.top_k(s, 5)\n")
+    report = tmp_path / "findings.sarif"
+    rc = main([str(bad), "--no-baseline", "--json", str(report),
+               "--format", "sarif", "--tests-dir", "",
+               "--no-trace-checks"])
+    assert rc == 1
+    doc = json.loads(report.read_text())
+    assert doc["version"] == "2.1.0"
+    assert doc["runs"][0]["results"][0]["ruleId"] == "canonical-selection"
+
+
 # -- baseline ---------------------------------------------------------------
 
 def test_baseline_matches_by_symbol_and_reports_stale(tmp_path):
@@ -396,16 +577,69 @@ def test_cli_gate_and_json_report(tmp_path, capsys):
     assert main([str(ok), "--no-baseline", "--tests-dir", ""]) == 0
 
 
+def test_stale_baseline_entry_on_scanned_file_is_exit_2(tmp_path, capsys):
+    """A baseline entry whose symbol no longer fires in a *scanned* file
+    is rotten gate input: exit 2 with an ERROR naming the entry."""
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"version": 1, "entries": [
+        {"check": "canonical-selection", "path": str(clean),
+         "symbol": "gone", "reason": "was real once"}]}))
+    rc = main([str(clean), "--baseline", str(bl), "--tests-dir", "",
+               "--no-trace-checks"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "stale baseline entry" in err and "gone" in err
+
+
+def test_stale_entry_for_unscanned_file_does_not_gate(tmp_path, capsys):
+    """The same stale entry must NOT flip the gate when its file is
+    outside the scanned paths — a benchmarks-only scan cannot be asked
+    to re-verify src/ entries."""
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"version": 1, "entries": [
+        {"check": "canonical-selection", "path": "elsewhere/mod.py",
+         "symbol": "gone", "reason": "belongs to another scan scope"}]}))
+    rc = main([str(clean), "--baseline", str(bl), "--tests-dir", "",
+               "--no-trace-checks"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "not gating" in out
+
+
+def test_transformer_moe_baseline_entry_still_fires():
+    """Satellite re-verify: the committed baseline's transformer MoE
+    entry must still match a live finding — otherwise the gate would now
+    exit 2 on it."""
+    repo = Path(__file__).resolve().parent.parent
+    target = repo / "src/repro/models/transformer.py"
+    fs = analyze_paths([str(target)], tests_dir=None)
+    hits = [f for f in fs if f.check == "canonical-selection"
+            and f.symbol == "_moe_ffn.local_moe"]
+    assert len(hits) == 1
+    entries = json.loads((repo / "reprolint_baseline.json").read_text())
+    assert any(e["symbol"] == "_moe_ffn.local_moe"
+               and e["path"] == "src/repro/models/transformer.py"
+               and e["reason"].strip()
+               for e in entries["entries"])
+
+
 # -- the real gate ----------------------------------------------------------
 
-def test_repo_gate_is_clean(monkeypatch):
-    """`python -m repro.analysis src/` exits clean: every finding in the
-    tree is suppressed with a reason or carried by the committed
-    baseline — the exact CI invocation."""
+def test_repo_gate_is_clean(monkeypatch, tmp_path):
+    """`python -m repro.analysis src/ benchmarks/ examples/` exits clean:
+    every finding in the tree is suppressed with a reason or carried by
+    the committed baseline / precision audit — the exact CI invocation.
+    Trace-level checks are exercised separately (test_precision_audit,
+    test_retrace) so this stays a fast pure-AST pass."""
     repo = Path(__file__).resolve().parent.parent
     monkeypatch.chdir(repo)
-    rc = main(["src", "--json", str(repo / "reprolint_findings.json")])
-    (repo / "reprolint_findings.json").unlink(missing_ok=True)
+    rc = main(["src", "benchmarks", "examples",
+               "--json", str(tmp_path / "reprolint_findings.json"),
+               "--no-trace-checks"])
     assert rc == 0
 
 

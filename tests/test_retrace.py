@@ -1,0 +1,109 @@
+"""Retrace sentinel: a shape-churn loop is counted, a warm same-shape
+repeat counts zero, the gauge lands on the metrics registry, and the
+linter's trace-level steady-state check fires on a seeded cache-key
+leak while staying quiet on every registered hot path."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import jaxpr as J
+from repro.analysis.retrace import GAUGE, RetraceSentinel, \
+    steady_state_findings
+from repro import obs
+
+
+@jax.jit
+def _double(x):
+    return x * 2.0
+
+
+def test_shape_churn_is_counted():
+    with RetraceSentinel("churn", publish=False) as s:
+        s.watch("double", _double)
+        for n in (33, 34, 35):               # three distinct shapes
+            _double(jnp.ones((n,), jnp.float32)).block_until_ready()
+    assert s.count >= 3 or s.per_site.get("double", 0) >= 3
+    assert s.per_site["double"] >= 3
+
+
+def test_warm_same_shape_repeat_counts_zero():
+    x = jnp.ones((36,), jnp.float32)
+    y = jnp.ones((36,), jnp.float32)
+    _double(x).block_until_ready()           # warm through the same path
+    with RetraceSentinel("steady", publish=False) as s:
+        s.watch("double", _double)
+        _double(y).block_until_ready()
+    assert s.per_site["double"] == 0
+    assert s.count == 0
+
+
+def test_gauge_is_published_on_exit():
+    x = jnp.ones((37,), jnp.float32)
+    _double(x).block_until_ready()
+    with RetraceSentinel("gauged") as s:
+        _double(x).block_until_ready()
+    assert obs.registry().gauge(GAUGE).value == float(s.count) == 0.0
+
+
+def test_watch_unwraps_partial():
+    p = functools.partial(_double)
+    s = RetraceSentinel("partial", publish=False)
+    s.watch("double", p)
+    assert "double" in s._watched
+
+
+# -- the linter's trace-level check ------------------------------------------
+
+def _churn_hot_path():
+    """A seeded cache-key leak: every call passes a fresh static value,
+    so the same-shape second call still recompiles."""
+    @functools.partial(jax.jit, static_argnums=1)
+    def f(x, n):
+        return x + n
+
+    state = {"n": 0}
+
+    def call(x):
+        state["n"] += 1
+        return f(x, state["n"])
+
+    def make_args():
+        return (jnp.ones((5,), jnp.float32),)
+
+    def build():
+        return f, call, make_args, ("x",)
+
+    return J.HotPath(name="fixture.churn", path="fixture.py", build=build)
+
+
+def _clean_hot_path():
+    @jax.jit
+    def f(x):
+        return x + 1.0
+
+    def build():
+        return f, f, lambda: (jnp.ones((6,), jnp.float32),), ("x",)
+
+    return J.HotPath(name="fixture.clean", path="fixture.py", build=build)
+
+
+def test_steady_state_finding_fires_on_seeded_churn():
+    fs = steady_state_findings([_churn_hot_path()])
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.check == "retrace"
+    assert f.symbol == "fixture.churn:steady-state"
+    assert "recompiled" in f.message
+
+
+def test_steady_state_quiet_on_clean_twin():
+    assert steady_state_findings([_clean_hot_path()]) == []
+
+
+def test_registered_hot_paths_are_steady_state():
+    """The repo invariant CI asserts: every hot path in the registry is
+    all-cache-hits on a same-shape second call."""
+    assert steady_state_findings() == []
